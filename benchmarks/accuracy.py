@@ -1,0 +1,80 @@
+"""Empirical validation benchmarks the paper could not run (it is analytical).
+
+error_vs_r     — §2.5/§2.4: observed componentwise error (in units of u64) versus the
+                 moduli count r, for both substrates.  The paper reports 2–10 u for
+                 bounded-condition inputs at full r; we measure the whole curve.
+gemm_count     — Ozaki I Θ(S²) vs Ozaki II Θ(r) arithmetic-volume comparison.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ozaki1, ozaki2
+
+Row = Tuple[str, float, float]
+U64 = 2.0 ** -53
+
+
+def _timed(fn, *args) -> Tuple[float, object]:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / 3 * 1e6, out
+
+
+def error_vs_r() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    k = 512
+    a = jnp.asarray(rng.standard_normal((64, k)))
+    b = jnp.asarray(rng.standard_normal((k, 64)))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    denom = np.abs(np.asarray(a)) @ np.abs(np.asarray(b))
+    for substrate in ("int8", "fp8"):
+        for r in (6, 8, 10, 12, 14, 16):
+            plan = ozaki2.make_plan(k, r=r, substrate=substrate)
+            us, c = _timed(ozaki2.emulated_matmul, a, b, plan)
+            err = float(np.max(np.abs(np.asarray(c) - ref) / denom) / U64)
+            rows.append((f"error_vs_r/{substrate}/r{r}", us, err))
+    return rows
+
+
+def ozaki1_vs_ozaki2_volume() -> List[Row]:
+    rows: List[Row] = []
+    for k in (1024, 4096, 16384):
+        p1 = ozaki1.make_plan(k)
+        p2i = ozaki2.make_plan(k, substrate="int8")
+        p2f = ozaki2.make_plan(k, substrate="fp8")
+        rows.append((f"volume/ozaki1_gemms/k{k}", 0.0, float(p1.num_gemms)))
+        rows.append((f"volume/ozaki2_int8_gemms/k{k}", 0.0, float(p2i.alpha)))
+        rows.append((f"volume/ozaki2_fp8_gemms/k{k}", 0.0, float(p2f.alpha)))
+    return rows
+
+
+def emulation_wallclock() -> List[Row]:
+    """CPU wall-clock per emulated GEMM (machinery check; TPU is the perf target)."""
+    rows: List[Row] = []
+    rng = np.random.default_rng(1)
+    for n in (128, 256):
+        a = jnp.asarray(rng.standard_normal((n, n)))
+        b = jnp.asarray(rng.standard_normal((n, n)))
+        for name, fn in (
+            ("ozaki2_int8", lambda a, b, n=n: ozaki2.emulated_matmul(
+                a, b, ozaki2.make_plan(n, substrate="int8"))),
+            ("ozaki2_fp8", lambda a, b, n=n: ozaki2.emulated_matmul(
+                a, b, ozaki2.make_plan(n, substrate="fp8"))),
+            ("ozaki1_int8", lambda a, b: ozaki1.emulated_matmul(a, b)),
+            ("native_f64", jnp.matmul),
+        ):
+            us, _ = _timed(fn, a, b)
+            rows.append((f"wallclock_gemm/{name}/n{n}", us, 0.0))
+    return rows

@@ -1,0 +1,104 @@
+"""Kernel benchmarks: wall-clock on CPU-interpret (machinery check) plus the
+*structural* β accounting that the paper's §5/Appendix D analysis is about.
+
+derived column:
+  wallclock rows — CPU interpret μs (not TPU perf; the roofline story for TPU lives
+                   in EXPERIMENTS.md §Roofline from the compiled dry-run);
+  beta rows      — HBM bytes of the emulated kernel / bytes of the native-FP64
+                   kernel, computed from the actual operand/result shapes.  The
+                   paper's claim is β = 1 for f64/ds output and (8+r)/16-ish for
+                   digits mode; this prints the exact numbers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ozaki2
+from repro.kernels import ops, ref
+
+Row = Tuple[str, float, float]
+
+
+def _timed(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _beta(in_native: int, out_native: int, in_emu: int, out_emu: int) -> float:
+    return (in_emu + out_emu) / (in_native + out_native)
+
+
+def all_kernels() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    # --- GEMM ---------------------------------------------------------------
+    m = k = n = 128
+    a = jnp.asarray(rng.standard_normal((m, k)))
+    b = jnp.asarray(rng.standard_normal((k, n)))
+    plan = ozaki2.make_plan(k)
+    for rep in ("f64", "digits", "ds"):
+        us = _timed(lambda rep=rep: ops.ozaki_gemm(a, b, plan=plan, out_rep=rep,
+                                                   bm=64, bn=64, bk=64))
+        out_bytes = {"f64": 8, "ds": 8, "digits": plan.r}[rep] * m * n
+        beta = _beta((m * k + k * n) * 8, m * n * 8,
+                     (m * k + k * n) * 8, out_bytes)
+        rows.append((f"kernel_gemm/{rep}/beta", us, beta))
+
+    # --- batched GEMV (B = 8 and 2: the Table 3/4 rows) ----------------------
+    M, N = 512, 256
+    A = jnp.asarray(rng.standard_normal((M, N)))
+    for B in (8, 2):
+        X = jnp.asarray(rng.standard_normal((N, B)))
+        planv = ozaki2.make_plan(N)
+        for rep in ("f64", "digits"):
+            us = _timed(lambda rep=rep, X=X: ops.ozaki_gemv(
+                A, X, plan=planv, out_rep=rep, bm=128, bk=128))
+            out_bytes = {"f64": 8, "digits": planv.r}[rep] * M * B
+            beta = _beta((M * N + N * B) * 8, M * B * 8,
+                         (M * N + N * B) * 8, out_bytes)
+            rows.append((f"kernel_gemv_b{B}/{rep}/beta", us, beta))
+
+    # --- 7-point stencil ------------------------------------------------------
+    u = jnp.asarray(rng.standard_normal((32, 32, 32)))
+    c = jnp.asarray(np.array([6.0, -1, -1, -1, -1, -1, -1]))
+    for rep in ("f64", "digits", "ds"):
+        usx = _timed(lambda rep=rep: ops.ozaki_stencil7(u, c, out_rep=rep, bz=8))
+        plan_s = ozaki2.make_plan(8, margin_bits=4)
+        npts = 32 ** 3
+        out_bytes = {"f64": 8, "ds": 8, "digits": plan_s.r}[rep] * npts
+        beta = _beta(npts * 8, npts * 8, npts * 8, out_bytes)
+        rows.append((f"kernel_stencil/{rep}/beta", usx, beta))
+
+    # --- Blocked-ELL SpMV ------------------------------------------------------
+    Ms, Ns, bw = 1024, 1024, 16
+    col = jnp.asarray(rng.integers(0, Ns, (Ms, bw)).astype(np.int32))
+    val_np = rng.standard_normal((Ms, bw))
+    val_np[rng.random((Ms, bw)) < 0.3] = 0.0
+    val = jnp.asarray(val_np)
+    x = jnp.asarray(rng.standard_normal(Ns))
+    for rep in ("f64", "digits"):
+        us = _timed(lambda rep=rep: ops.ozaki_spmv_bell(val, col, x, out_rep=rep,
+                                                        br=256))
+        plan_v = ozaki2.make_plan(bw, margin_bits=4)
+        out_bytes = {"f64": 8, "digits": plan_v.r}[rep] * Ms
+        # native bytes: values + colidx + x-gather (cached ~1x) + y
+        native = Ms * bw * 8 + Ms * bw * 4 + Ns * 8 + Ms * 8
+        emu = Ms * bw * 8 + Ms * bw * 4 + Ns * 8 + out_bytes
+        rows.append((f"kernel_spmv/{rep}/beta", us, emu / native))
+
+    # --- padding-ratio -> beta (Appendix D) -----------------------------------
+    for rho in (1.0, 2.0, 4.0):
+        rows.append((f"kernel_spmv/padding_rho{rho}/beta_bound", 0.0, rho))
+    return rows

@@ -1,0 +1,56 @@
+"""Model-level benchmarks: smoke-config step timings per architecture.
+
+CPU wall-clock for the reduced configs (machinery check — TPU perf lives in the
+dry-run roofline).  One row per (arch, step-kind).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models.transformer import Model
+from repro.optim.adamw import adamw_init
+from repro.train.loop import make_train_step
+
+Row = Tuple[str, float, float]
+
+
+def smoke_step_timings() -> List[Row]:
+    rows: List[Row] = []
+    for arch in registry.list_archs():
+        cfg = registry.get_config(arch, smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+        batch = registry.concrete_batch(
+            cfg, registry.SHAPES_BY_NAME["train_4k"], batch=2, seq=16)
+
+        step = jax.jit(make_train_step(model))
+        opt = adamw_init(params)
+        p, o, m = step(params, opt, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(3):
+            p, o, m = step(p, o, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"model_train_step/{arch}", us, float(n_params)))
+
+        cache = model.init_cache(batch=2, seq_len=32)
+        dec = jax.jit(model.decode_step)
+        lg, cache = dec(params, cache, jnp.zeros((2, 1), jnp.int32),
+                        jnp.asarray(0, jnp.int32))
+        jax.block_until_ready(lg)
+        t0 = time.perf_counter()
+        for i in range(5):
+            lg, cache = dec(params, cache, jnp.zeros((2, 1), jnp.int32),
+                            jnp.asarray(i + 1, jnp.int32))
+        jax.block_until_ready(lg)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append((f"model_decode_step/{arch}", us, float(n_params)))
+    return rows

@@ -1,0 +1,69 @@
+"""Benchmark harness — one section per paper table + empirical validations.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured/derived quantity).
+Run: ``PYTHONPATH=src python -m benchmarks.run [--section NAME]``.
+
+x64 is enabled (before JAX initialises) because the emulation benchmarks compare
+against float64 oracles; device count stays 1 (the dry-run owns the 512-device
+configuration, see src/repro/launch/dryrun.py).
+"""
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _sections():
+    # Imports deferred so --section only pays for what it runs.
+    from benchmarks import accuracy, tables
+
+    secs = {
+        "table1": tables.table1_slice_counts,
+        "table2": tables.table2_architectures,
+        "table3": tables.table3_speedups,
+        "table4": tables.table4_h100_baseline,
+        "table5": tables.table5_substrates,
+        "moduli": tables.moduli_requirements,
+        "error_vs_r": accuracy.error_vs_r,
+        "volume": accuracy.ozaki1_vs_ozaki2_volume,
+        "wallclock": accuracy.emulation_wallclock,
+    }
+    try:
+        from benchmarks import kernels as kernel_bench
+        secs["kernels"] = kernel_bench.all_kernels
+    except ImportError:
+        pass
+    try:
+        from benchmarks import models as model_bench
+        secs["models"] = model_bench.smoke_step_timings
+    except ImportError:
+        pass
+    return secs
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--section", default=None,
+                        help="run a single section (default: all)")
+    args = parser.parse_args()
+
+    secs = _sections()
+    names = [args.section] if args.section else list(secs)
+    print("name,us_per_call,derived")
+    ok = True
+    for name in names:
+        try:
+            for row, us, derived in secs[name]():
+                print(f"{row},{us:.2f},{derived:.6g}")
+        except Exception as e:  # pragma: no cover - surfacing, not hiding
+            ok = False
+            print(f"{name}/ERROR,0,0  # {type(e).__name__}: {e}", file=sys.stderr)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""FP64-exact training on FP64-free hardware — the paper's thesis, end to end.
+
+Trains the same tiny model twice: once with every weight matmul in native XLA
+float64 (the oracle — impossible on a B300/TPU at speed), once with every weight
+matmul routed through Ozaki-II on the int8 substrate (the paper's replacement).
+The two loss trajectories agree to ~1e-12 relative: the emulated path IS double
+precision for training purposes.
+
+    PYTHONPATH=src python examples/fp64_exact_training.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.loop import make_train_step
+from repro.data.pipeline import DataConfig, synth_batch
+
+
+def run(policy_name: str, steps: int = 8):
+    cfg = registry.get_config("yi-6b", smoke=True, policy_name=policy_name,
+                              compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)))
+    dc = DataConfig(global_batch=4, seq_len=32)
+    losses = []
+    for i in range(steps):
+        batch = synth_batch(dc, cfg, i)
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    return np.asarray(losses)
+
+
+def main():
+    fp64 = run("fp64")
+    emulated = run("ozaki2_int8")
+    bf16 = run("bf16")
+    print(f"{'step':>4} {'fp64 (oracle)':>16} {'ozaki2_int8':>16} {'bf16':>12}")
+    for i, (a, b, c) in enumerate(zip(fp64, emulated, bf16)):
+        print(f"{i:4d} {a:16.10f} {b:16.10f} {c:12.6f}")
+    dev = np.max(np.abs(fp64 - emulated) / np.abs(fp64))
+    dev_bf16 = np.max(np.abs(fp64 - bf16) / np.abs(fp64))
+    print(f"\nmax relative loss deviation: ozaki2_int8 = {dev:.2e} "
+          f"(bf16 = {dev_bf16:.2e})")
+    assert dev < 1e-9, "emulated training diverged from the float64 oracle"
+    print("PASS: Ozaki-II training is float64-equivalent.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Architecture registry: ``--arch <id>`` resolution, shape cells, input specs.
+
+``runnable_cells()`` enumerates every (arch × shape) dry-run cell, applying the
+assignment's skip rules:
+  * long_500k needs sub-quadratic attention — skipped for pure full-attention
+    archs (whisper, qwen2-vl, minitron, yi, gemma-7b, deepseek-moe, llama4-scout);
+    run for gemma3 (5:1 local), jamba (hybrid SSM), xlstm (SSM).
+  * none of the assigned archs is encoder-only, so no decode-shape skips.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeSpec
+
+ARCHS: Dict[str, str] = {
+    "whisper-medium": "repro.configs.whisper_medium",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "yi-6b": "repro.configs.yi_6b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+# Archs whose sequence mixing is sub-quadratic (SSM / hybrid / sliding-window
+# majority) — the only ones that run the long_500k cell.
+SUBQUADRATIC = ("gemma3-4b", "jamba-1.5-large-398b", "xlstm-350m")
+
+
+def get_config(arch: str, smoke: bool = False, **overrides) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[arch])
+    cfg = mod.SMOKE_CONFIG if smoke else mod.CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def cell_is_runnable(arch: str, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "long_500k skipped: pure full-attention arch (see DESIGN.md)"
+    return True, ""
+
+
+def runnable_cells() -> List[Tuple[str, ShapeSpec]]:
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, _ = cell_is_runnable(arch, shape)
+            if ok:
+                out.append((arch, shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation — dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: Optional[int] = None) -> Dict:
+    """Shape/dtype stand-ins for every model input of this (arch × shape) cell.
+
+    train/prefill: token (or stub-frontend embedding) batch + labels;
+    decode: one new token + position (the KV/state cache is constructed
+    separately by ``cache_specs`` since it is carried state, not input).
+    """
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    f = jnp.bfloat16
+    if shape.kind in ("train", "prefill"):
+        specs: Dict = {}
+        if cfg.frontend == "vision":
+            # patch embeddings from the stub frontend + M-RoPE position streams
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f)
+            specs["positions"] = jax.ShapeDtypeStruct((B, 3, S), jnp.int32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.family == "encdec":
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), f)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+    # decode: one token against a seq_len-deep cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, batch: int,
+                   seq: Optional[int] = None, seed: int = 0) -> Dict:
+    """Small *concrete* batch for smoke tests (reduced configs only)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    S = seq or min(shape.seq_len, 32)
+    out: Dict = {}
+    if cfg.frontend == "vision":
+        out["embeds"] = jnp.asarray(
+            rng.standard_normal((batch, S, cfg.d_model)), jnp.bfloat16)
+        pos = np.broadcast_to(np.arange(S), (batch, 3, S))
+        out["positions"] = jnp.asarray(pos.copy(), jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, S)), jnp.int32)
+    if cfg.family == "encdec":
+        out["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.bfloat16)
+    out["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, S)), jnp.int32)
+    return out

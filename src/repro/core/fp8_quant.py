@@ -1,0 +1,50 @@
+"""FP8 (E4M3) exact-integer quantisation helpers for the Ozaki-II FP8 substrate.
+
+Paper §2.4: modular reduction is an integer operation, so running Ozaki II on FP8
+tensor cores needs the Uchino/Ozaki/Imamura quantisation trick — exploit the set of
+integers that E4M3 represents *exactly* (all |x| with <= 4 significand bits; in
+particular every integer |x| <= 16) and split each balanced residue into two exact
+4-bit halves.  The product of two residues is then reassembled from three FP8 MMAs
+(Karatsuba), giving the (3r+·) FP8 cost structure the paper describes.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def is_exact_e4m3(x: int) -> bool:
+    """True iff integer x is exactly representable in float8_e4m3fn."""
+    return float(np.asarray(float(x), np.float8_e4m3fn).astype(np.float64)) == float(x)
+
+
+def fp8_split(res: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Split balanced int8 residues (|res| <= 128) into exact E4M3 halves.
+
+    res = 16*hi + lo with |hi| <= 8, |lo| <= 8; hi, lo, and hi+lo (|.| <= 16) are all
+    exactly representable in E4M3, which is what makes the Karatsuba mid-plane
+    (x_h+x_l)(y_h+y_l) exact on the FP8 engine.
+    """
+    r32 = res.astype(jnp.int32)
+    hi = jnp.round(r32.astype(jnp.float32) / 16.0).astype(jnp.int32)
+    lo = r32 - 16 * hi
+    return hi, lo
+
+
+def fp8_karatsuba_combine(H: jax.Array, Mid: jax.Array, L: jax.Array,
+                          m: int) -> jax.Array:
+    """Recombine the three Karatsuba planes mod m (balanced int32 in, balanced out).
+
+    x·y = 256·H + 16·(Mid − H − L) + L.  Planes are reduced mod m before
+    recombination so all int32 intermediates stay < 2**17.
+    """
+    def bal(v):
+        u = jnp.remainder(v, m)
+        return jnp.where(u > (m - 1) // 2, u - m, u)
+
+    Hm, Lm, Midm = bal(H), bal(L), bal(Mid)
+    return bal((256 % m) * Hm + (16 % m) * (Midm - Hm - Lm) + Lm)

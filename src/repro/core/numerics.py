@@ -1,0 +1,106 @@
+"""Compensated-summation primitives: the paper's BLAS-1 escape route (§7.1(a)).
+
+The audit in §7.1 routes BLAS-1 reductions (ddot, dnrm2, CG residuals) onto the
+healthy FP32 vector pipe with Kahan compensation instead of Ozaki emulation.  These
+helpers implement error-free transformations (two_sum / two_prod via FMA-style
+splitting), Kahan summation, compensated dot products, and double-single (f32,f32)
+carriers used by the Pallas kernels to return FP64-accurate values on hardware with
+no FP64 VMEM type.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pair = Tuple[jax.Array, jax.Array]
+
+
+def two_sum(a: jax.Array, b: jax.Array) -> Pair:
+    """Error-free transformation: a + b = s + e exactly (Knuth)."""
+    s = a + b
+    v = s - a
+    e = (a - (s - v)) + (b - v)
+    return s, e
+
+
+def fast_two_sum(a: jax.Array, b: jax.Array) -> Pair:
+    """EFT valid when |a| >= |b| (Dekker)."""
+    s = a + b
+    e = b - (s - a)
+    return s, e
+
+
+def _veltkamp_split(a: jax.Array, bits: int) -> Pair:
+    c = (2.0 ** bits + 1.0) * a
+    hi = c - (c - a)
+    return hi, a - hi
+
+
+def two_prod(a: jax.Array, b: jax.Array) -> Pair:
+    """Error-free product a*b = p + e (Veltkamp/Dekker splitting; paper §2.1)."""
+    p = a * b
+    bits = 27 if a.dtype == jnp.float64 else 12
+    ah, al = _veltkamp_split(a, bits)
+    bh, bl = _veltkamp_split(b, bits)
+    e = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, e
+
+
+def kahan_sum(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Kahan-compensated reduction along ``axis`` (scan-based, O(n))."""
+    xm = jnp.moveaxis(x, axis, 0)
+
+    def step(carry, xi):
+        s, c = carry
+        y = xi - c
+        t = s + y
+        c = (t - s) - y
+        return (t, c), None
+
+    (s, _), _ = jax.lax.scan(step, (jnp.zeros_like(xm[0]), jnp.zeros_like(xm[0])), xm)
+    return s
+
+
+def compensated_dot(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Dot2-style compensated inner product: ~twice-working-precision accuracy.
+
+    This is the FP32+Kahan BLAS-1 path of §7.1(a): on hardware whose FP64 pipe has
+    collapsed, running this in FP32 gives ~2^-48 effective accuracy at FP32 speed.
+    """
+    p, e = two_prod(x, y)
+
+    def step(carry, inp):
+        s, c = carry
+        pi, ei = inp
+        s, e2 = two_sum(s, pi)
+        c = c + (e2 + ei)
+        return (s, c), None
+
+    (s, c), _ = jax.lax.scan(step, (jnp.zeros((), x.dtype), jnp.zeros((), x.dtype)),
+                             (p, e))
+    return s + c
+
+
+# ---------------------------------------------------------------------------
+# Double-single (two-float32) carrier — the kernels' FP64-free output format.
+# ---------------------------------------------------------------------------
+
+def ds_from_f64(x: jax.Array) -> Pair:
+    """Split float64 into (hi, lo) float32 with hi + lo == x to f32-pair precision."""
+    hi = x.astype(jnp.float32)
+    lo = (x - hi.astype(jnp.float64)).astype(jnp.float32)
+    return hi, lo
+
+
+def ds_to_f64(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    return hi.astype(jnp.float64) + lo.astype(jnp.float64)
+
+
+def ds_add(a: Pair, b: Pair) -> Pair:
+    """Double-single addition (f32 pairs), ~45-bit accuracy."""
+    s, e = two_sum(a[0], b[0])
+    e = e + a[1] + b[1]
+    return fast_two_sum(s, e)

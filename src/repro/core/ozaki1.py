@@ -1,0 +1,104 @@
+"""Ozaki Scheme I — mantissa-slicing FP64 emulation (paper §2.2, Table 1).
+
+The original error-free-transformation scheme: decompose A = Σ_p A^(p), B = Σ_q B^(q)
+into S slices of b payload bits each and reconstruct C ≈ Σ_{p,q} A^(p) B^(q) — cost
+Θ(S²) low-precision GEMMs versus Ozaki II's Θ(r).  Implemented here as the paper's
+comparison baseline, with the accumulator-bound slice-width analysis of eq. (3):
+
+    2b + ceil(log2 k) <= w_acc   =>   b* = (w_acc - ceil(log2 k)) // 2
+
+We carry slices as signed integers on the INT8/INT32 path (w_acc = 31) — the
+substrate Table 1 shows is *input-bound* rather than accumulator-bound at large k —
+and optionally drop the low-significance slice pairs (p + q >= S_keep) the way fast
+Ozaki-I implementations do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import splitting
+
+
+def slice_width(k: int, w_acc: int = 31, input_bits: int = 7) -> int:
+    """Paper eq. (3): max safe payload bits per slice for summation length k."""
+    b_star = (w_acc - math.ceil(math.log2(max(k, 2)))) // 2
+    return max(1, min(b_star, input_bits))
+
+
+def slice_count(payload_bits: int, b: int) -> int:
+    """Slices needed to cover ``payload_bits`` of mantissa at b bits per slice."""
+    return math.ceil(payload_bits / b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ozaki1Plan:
+    slice_bits: int          # b: payload bits per slice
+    num_slices: int          # S
+    payload_bits: int        # total mantissa bits captured (<= 53)
+    full_cross: bool = True  # keep all S² cross terms (True) or triangle cut
+
+    @property
+    def num_gemms(self) -> int:
+        s = self.num_slices
+        return s * s if self.full_cross else s * (s + 1) // 2
+
+
+def make_plan(k: int, payload_bits: int = 53, w_acc: int = 31,
+              input_bits: int = 7, full_cross: bool = True) -> Ozaki1Plan:
+    b = slice_width(k, w_acc, input_bits)
+    return Ozaki1Plan(slice_bits=b, num_slices=slice_count(payload_bits, b),
+                      payload_bits=payload_bits, full_cross=full_cross)
+
+
+def slice_decompose(x: jax.Array, plan: Ozaki1Plan,
+                    scale_axis: int) -> Tuple[jax.Array, jax.Array]:
+    """Decompose to (slices int8 (S, *x.shape), shift int32).
+
+    x ≈ 2^{-shift} * Σ_p slices[p] * 2^{(S-1-p)*b}; slice p holds b bits, balanced.
+    """
+    xi, shift = splitting.scale_to_int(x, plan.payload_bits, axis=scale_axis)
+    b, s = plan.slice_bits, plan.num_slices
+    slices = []
+    rem = xi
+    for p in range(s):
+        w = 2.0 ** ((s - 1 - p) * b)
+        sl = jnp.round(rem / w)
+        rem = rem - sl * w
+        slices.append(sl.astype(jnp.int32).astype(jnp.int8))
+    return jnp.stack(slices, axis=0), shift
+
+
+def _dot_int8(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(a8, b8, (((a8.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "out_dtype"))
+def emulated_matmul(a: jax.Array, b: jax.Array, plan: Optional[Ozaki1Plan] = None,
+                    out_dtype=jnp.float64) -> jax.Array:
+    """C = A @ B via Ozaki I slicing on the INT8/INT32 substrate.
+
+    Θ(S²) int8 GEMMs accumulated into FP64 with per-pair power-of-two weights.
+    """
+    if plan is None:
+        plan = make_plan(a.shape[-1])
+    a = a.astype(out_dtype)
+    b = b.astype(out_dtype)
+    asl, ashift = slice_decompose(a, plan, scale_axis=-1)
+    bsl, bshift = slice_decompose(b, plan, scale_axis=0)
+    bbits, s = plan.slice_bits, plan.num_slices
+    out = jnp.zeros((a.shape[0], b.shape[1]), out_dtype)
+    for p in range(s):
+        for q in range(s):
+            if not plan.full_cross and p + q >= s:
+                continue
+            w = 2.0 ** ((2 * (s - 1) - p - q) * bbits)
+            out = out + _dot_int8(asl[p], bsl[q]).astype(out_dtype) * w
+    return splitting.apply_unscale(out, ashift, bshift)

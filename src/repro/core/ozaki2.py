@@ -1,0 +1,251 @@
+"""Ozaki Scheme II — CRT/residue FP64 matrix-multiplication emulation (paper §2.3–§2.4).
+
+Pipeline (paper Phases 1–3):
+  1. ``scale_to_int``  : Ã = ⌊D A⌉, B̃ = ⌊B E⌉ with exact power-of-two diagonal scaling.
+  2. ``modular_matmul``: C⁽ⁱ⁾ = (Ã mod mᵢ)(B̃ mod mᵢ) mod mᵢ for r pairwise-coprime
+     moduli.  INT8 substrate: int8 dot with int32 accumulation (the TPU MXU int8 path,
+     standing in for the paper's INT8 tensor cores).  FP8 substrate: the Uchino-style
+     quantisation trick of §2.4 — each balanced residue is split into two exact 4-bit
+     E4M3 halves and multiplied with a Karatsuba 3-MMA schedule, FP32 accumulation;
+     exactness is guaranteed by construction (all partial sums are integers < 2²⁴).
+  3. ``garner_reconstruct``: balanced-digit Garner mixed-radix reconstruction (paper
+     eq. (7), Appendix A), followed by the exact power-of-two unscale D^{-1}·E^{-1}.
+
+Everything is pure JAX (jit/vmap/grad-safe, no Python-level data dependence), with the
+moduli plan as a static argument.  The Pallas kernels in ``repro.kernels`` implement the
+*fused* version of the same arithmetic (β = 1 discipline); this module is the
+mathematical reference and the XLA fallback path used by the precision policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fp8_quant
+from repro.core import moduli as moduli_lib
+from repro.core import splitting
+
+Substrate = str  # "int8" | "fp8"
+
+# int32 accumulation of balanced int8 residue products (|v| <= 128) is exact for
+# k <= 2**31 / 128**2; chunk the contraction above this.
+_INT8_K_CHUNK = 1 << 17
+# fp8 path: per-plane integer products <= 16**2; fp32 accumulation exact below 2**24.
+_FP8_K_CHUNK = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Static Ozaki-II configuration (hashable; used as a jit static argument)."""
+
+    moduli: Tuple[int, ...]
+    payload_bits: int            # p: |Ã| < 2**p
+    substrate: Substrate = "int8"
+
+    @property
+    def r(self) -> int:
+        return len(self.moduli)
+
+    @property
+    def garner(self) -> moduli_lib.GarnerConstants:
+        return moduli_lib.garner_constants(self.moduli)
+
+    @property
+    def alpha(self) -> int:
+        """TME compute multiplier α: low-precision MMAs per FP64 op (paper Def. 1).
+
+        INT8: r modular GEMMs.  FP8: 3r (Karatsuba hi/lo planes, §2.4's (3r+1) without
+        the +1 correction GEMM, which our exact-by-construction split does not need).
+        """
+        return self.r if self.substrate == "int8" else 3 * self.r
+
+
+def make_plan(k: int, payload_bits: int = 53, r: Optional[int] = None,
+              substrate: Substrate = "int8", margin_bits: int = 2) -> Plan:
+    """Build a Plan for contractions of length k.
+
+    If ``r`` is given, the payload is clipped to what those r moduli support at this k
+    (paper §2.4 sensitivity analysis); otherwise r is the minimum for ``payload_bits``.
+    """
+    if r is None:
+        r = moduli_lib.required_r(k, payload_bits, margin_bits)
+    else:
+        payload_bits = min(payload_bits,
+                           moduli_lib.max_payload_bits(r, k, margin_bits))
+    return Plan(moduli=moduli_lib.DEFAULT_MODULI[:r], payload_bits=payload_bits,
+                substrate=substrate)
+
+
+# ---------------------------------------------------------------------------
+# Phase 1+: decomposition to residues
+# ---------------------------------------------------------------------------
+
+def decompose(x: jax.Array, plan: Plan, scale_axis: int,
+              via_hilo: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Residue decomposition: returns (residues int8 (r, *x.shape), shift int32).
+
+    ``scale_axis`` is the contraction axis (the axis along which the max-magnitude
+    scaling of Appendix C is taken): rows of A scale over axis=-1, columns of B over
+    axis=0.  ``via_hilo`` selects the TPU-native int32 (hi,lo) residue path (default)
+    versus the int64 oracle (CPU tests only).
+    """
+    xi, shift = splitting.scale_to_int(x, plan.payload_bits, axis=scale_axis)
+    if via_hilo:
+        hi, lo = splitting.split_hi_lo(xi)
+        res = splitting.residues_from_hilo(hi, lo, plan.moduli)
+    else:
+        res = splitting.residues_direct(xi, plan.moduli)
+    return res, shift
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: modular matmuls
+# ---------------------------------------------------------------------------
+
+def _balanced_mod_i32(v: jax.Array, m: int) -> jax.Array:
+    u = jnp.remainder(v, m)
+    return jnp.where(u > (m - 1) // 2, u - m, u)
+
+
+def _dot_int8(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 contraction over the last/first axes (MXU int8 path)."""
+    return jax.lax.dot_general(
+        a8, b8, (((a8.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def _chunked_modular_dot_int8(ares: jax.Array, bres: jax.Array, m: int) -> jax.Array:
+    """(Ã mod m)(B̃ mod m) mod m with int32-safe chunking over the contraction."""
+    k = ares.shape[-1]
+    if k <= _INT8_K_CHUNK:
+        return _balanced_mod_i32(_dot_int8(ares, bres), m)
+    acc = None
+    for s in range(0, k, _INT8_K_CHUNK):
+        e = min(s + _INT8_K_CHUNK, k)
+        part = _balanced_mod_i32(_dot_int8(ares[..., s:e], bres[s:e]), m)
+        acc = part if acc is None else _balanced_mod_i32(acc + part, m)
+    return acc
+
+
+def _dot_fp8(a: jax.Array, b: jax.Array) -> jax.Array:
+    """float8_e4m3fn x float8_e4m3fn -> float32 contraction (FP8 tensor-core path)."""
+    a8 = a.astype(jnp.float8_e4m3fn)
+    b8 = b.astype(jnp.float8_e4m3fn)
+    return jax.lax.dot_general(
+        a8, b8, (((a8.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _chunked_modular_dot_fp8(ares: jax.Array, bres: jax.Array, m: int) -> jax.Array:
+    """FP8-substrate modular product (paper §2.4): Karatsuba over 4-bit halves.
+
+    x·y = 256·H + 16·(Mid − H − L) + L with H = x_h·y_h, L = x_l·y_l,
+    Mid = (x_h+x_l)·(y_h+y_l).  Each plane accumulates exactly in FP32 (integer sums
+    < 2²⁴ for k <= 2¹⁶); planes are reduced mod m *before* recombination so all int32
+    arithmetic stays tiny.
+    """
+    k = ares.shape[-1]
+    a_hi, a_lo = fp8_quant.fp8_split(ares)
+    b_hi, b_lo = fp8_quant.fp8_split(bres)
+
+    def plane(asrc, bsrc, s, e):
+        return _dot_fp8(asrc[..., s:e].astype(jnp.float32),
+                        bsrc[s:e].astype(jnp.float32))
+
+    acc = None
+    for s in range(0, k, _FP8_K_CHUNK):
+        e = min(s + _FP8_K_CHUNK, k)
+        H = plane(a_hi, b_hi, s, e).astype(jnp.int32)
+        L = plane(a_lo, b_lo, s, e).astype(jnp.int32)
+        Mid = plane(a_hi + a_lo, b_hi + b_lo, s, e).astype(jnp.int32)
+        part = fp8_quant.fp8_karatsuba_combine(H, Mid, L, m)
+        acc = part if acc is None else _balanced_mod_i32(acc + part, m)
+    return acc
+
+
+def modular_matmul(ares: jax.Array, bres: jax.Array, plan: Plan) -> jax.Array:
+    """Stacked modular products C⁽ⁱ⁾, int32 (r, m, n), balanced representatives."""
+    fn = (_chunked_modular_dot_int8 if plan.substrate == "int8"
+          else _chunked_modular_dot_fp8)
+    outs = [fn(ares[i], bres[i], m) for i, m in enumerate(plan.moduli)]
+    return jnp.stack(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: Garner reconstruction
+# ---------------------------------------------------------------------------
+
+def garner_reconstruct(cres: jax.Array, plan: Plan,
+                       out_dtype=jnp.float64) -> jax.Array:
+    """Balanced-digit Garner: recover the (signed) integer value as a float.
+
+    cres: int32 (r, ...) balanced residues of the exact integer product.
+    Cost O(r²) elementwise ops — the TME γ term; amortised O(r²/k) per FMA.
+
+    Balanced digits make the representation of |C| << M terminate: digits beyond
+    ~log2(2|C|) bits are exactly zero, so only prefix products comparable to |C|
+    enter the float sum.  The accumulation runs in compensated double-double
+    arithmetic with exact double-double prefix-product constants, so the returned
+    value is the *correctly rounded* float of the exact integer: products whose
+    unscaled value is representable in the output mantissa are recovered EXACTLY.
+    """
+    from repro.core import numerics
+
+    gc = plan.garner
+    r = plan.r
+    ms = plan.moduli
+    acc = [jnp.zeros(cres.shape[1:], jnp.int32) for _ in range(r)]
+    out = jnp.zeros(cres.shape[1:], out_dtype)
+    comp = jnp.zeros(cres.shape[1:], out_dtype)
+    for j in range(r):
+        t = _balanced_mod_i32(
+            (cres[j].astype(jnp.int32) - acc[j]) * int(gc.inv_pref[j]), ms[j])
+        tf = t.astype(out_dtype)
+        # term = t * P_j in double-double: P_j = pref_f64 + pref_f64_lo (exact).
+        p_term, e_term = numerics.two_prod(
+            tf, jnp.asarray(gc.pref_f64[j], out_dtype))
+        e_term = e_term + tf * jnp.asarray(gc.pref_f64_lo[j], out_dtype)
+        s, e_sum = numerics.two_sum(out, p_term)
+        comp = comp + (e_sum + e_term)
+        out = s
+        for l in range(j + 1, r):
+            acc[l] = _balanced_mod_i32(acc[l] + t * int(gc.pref_mod[j, l]), ms[l])
+    return out + comp
+
+
+# ---------------------------------------------------------------------------
+# End-to-end emulated matmul
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("plan", "via_hilo", "out_dtype"))
+def emulated_matmul(a: jax.Array, b: jax.Array, plan: Plan,
+                    via_hilo: bool = True, out_dtype=jnp.float64) -> jax.Array:
+    """FP64-accurate C = A @ B via Ozaki Scheme II on a low-precision substrate.
+
+    a: (m, k), b: (k, n); float inputs (float64 for full FP64 emulation; float32
+    inputs also work with payload clipped to 24 bits).
+    """
+    a = a.astype(out_dtype)
+    b = b.astype(out_dtype)
+    ares, ashift = decompose(a, plan, scale_axis=-1, via_hilo=via_hilo)
+    bres, bshift = decompose(b, plan, scale_axis=0, via_hilo=via_hilo)
+    cres = modular_matmul(ares, bres, plan)
+    c_int = garner_reconstruct(cres, plan, out_dtype=out_dtype)
+    return splitting.apply_unscale(c_int, ashift, bshift)
+
+
+def emulated_matmul_batched(a: jax.Array, b: jax.Array, plan: Plan,
+                            **kw) -> jax.Array:
+    """vmap wrapper for (..., m, k) x (..., k, n) batched emulated matmuls."""
+    if a.ndim == 2 and b.ndim == 2:
+        return emulated_matmul(a, b, plan, **kw)
+    fn = functools.partial(emulated_matmul, plan=plan, **kw)
+    for _ in range(max(a.ndim, b.ndim) - 2):
+        fn = jax.vmap(fn)
+    return fn(a, b)

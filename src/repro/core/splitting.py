@@ -1,0 +1,111 @@
+"""Phase-1 integer scaling and the TPU-native (hi, lo) int32 operand representation.
+
+Paper mapping (Matsuoka 2026 §2.3 Phase 1, Appendix C):
+  * ``scale_to_int`` implements Ã = ⌊D A⌉ with power-of-two diagonal D chosen per row
+    (or per column for the right operand) so the largest entry uses the full payload
+    width p.  Power-of-two scaling is exact in FP64, so D^{-1} Ĉ E^{-1} is error-free.
+  * ``split_hi_lo`` is the hardware adaptation documented in DESIGN.md §3: TPUs have no
+    FP64 VMEM type and no fast int64, so the 53-bit scaled integer is carried as an
+    exact pair of int32 halves, x = hi * 2^26 + lo.  8 bytes/element — identical HBM
+    traffic to native FP64, which is what keeps the TME bandwidth multiplier β = 1.
+  * ``residues_from_hilo`` computes balanced residues mod m using int32 arithmetic only
+    ((hi mod m) * (2^26 mod m) + lo) mod m — bit-exact vs the int64 oracle (tested).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moduli import SPLIT_BITS, SPLIT_RADIX
+
+
+def scale_to_int(x: jax.Array, payload_bits: int, axis: int) -> Tuple[jax.Array, jax.Array]:
+    """Round x (float) to integers after exact power-of-two scaling along ``axis``.
+
+    Returns (xi, shift):
+      xi    : float64 array holding exact integers with |xi| < 2**payload_bits
+      shift : int32 per-row/col exponents with  xi ≈ x * 2**shift  (exact pow2 scale)
+
+    Rows (slices along ``axis``) that are entirely zero get shift 0.
+    """
+    ax = axis % x.ndim
+    absmax = jnp.max(jnp.abs(x), axis=ax, keepdims=True)
+    # exponent e with 2**e <= absmax < 2**(e+1); for absmax == 0 use e = 0.
+    e = jnp.floor(jnp.log2(jnp.where(absmax > 0, absmax, 1.0)))
+    shift = (payload_bits - 1) - e.astype(jnp.int32)
+    # ldexp (NOT exp2 — exp2 is inexact on some backends): exact pow2 scaling.
+    scaled = jnp.ldexp(x, jnp.broadcast_to(shift, x.shape))
+    # Guard against log2 boundary: ensure scaled max strictly < 2**payload_bits.
+    too_big = jnp.max(jnp.abs(scaled), axis=ax, keepdims=True) >= 2.0 ** payload_bits
+    shift = shift - too_big.astype(jnp.int32)
+    scaled = jnp.where(too_big, scaled * 0.5, scaled)
+    xi = jnp.round(scaled)
+    return xi, jnp.squeeze(shift, axis=ax)
+
+
+def split_hi_lo(xi: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Exact split of an integer-valued float array into int32 (hi, lo).
+
+    xi = hi * 2**SPLIT_BITS + lo, with |lo| <= 2**(SPLIT_BITS-1) (balanced) and
+    |hi| < 2**(53-SPLIT_BITS+1).  Both halves fit int32 for |xi| < 2**53.
+    """
+    hi_f = jnp.round(xi / SPLIT_RADIX)
+    lo_f = xi - hi_f * SPLIT_RADIX
+    return hi_f.astype(jnp.int32), lo_f.astype(jnp.int32)
+
+
+def merge_hi_lo(hi: jax.Array, lo: jax.Array, dtype=jnp.float64) -> jax.Array:
+    """Inverse of split_hi_lo (float reconstruction of the exact integer)."""
+    return hi.astype(dtype) * float(SPLIT_RADIX) + lo.astype(dtype)
+
+
+def _balanced_mod(v: jax.Array, m: int) -> jax.Array:
+    """Balanced representative of v mod m in int32: range [-(m//2), (m-1)//2]."""
+    u = jnp.remainder(v, m)          # canonical [0, m)
+    return jnp.where(u > (m - 1) // 2, u - m, u)
+
+
+def residues_from_hilo(hi: jax.Array, lo: jax.Array, moduli: Sequence[int]) -> jax.Array:
+    """Balanced residues (stacked axis 0) of x = hi*2^26 + lo for each modulus.
+
+    Pure int32 arithmetic (TPU-friendly).  Output dtype int8: every balanced residue of
+    every modulus <= 256 fits [-128, 127].
+    """
+    outs = []
+    for m in moduli:
+        radix_mod = SPLIT_RADIX % m
+        v = _balanced_mod(hi, m) * radix_mod + _balanced_mod(lo, m)
+        outs.append(_balanced_mod(v, m).astype(jnp.int8))
+    return jnp.stack(outs, axis=0)
+
+
+def residues_direct(xi: jax.Array, moduli: Sequence[int]) -> jax.Array:
+    """Oracle path: balanced residues straight from the integer-valued float (via int64).
+
+    Only usable where int64 is available (CPU tests with x64 enabled); the production
+    path is residues_from_hilo.
+    """
+    xl = xi.astype(jnp.int64)
+    outs = []
+    for m in moduli:
+        u = jnp.remainder(xl, m)
+        u = jnp.where(u > (m - 1) // 2, u - m, u)
+        outs.append(u.astype(jnp.int8))
+    return jnp.stack(outs, axis=0)
+
+
+def apply_unscale(c: jax.Array, shift_rows: jax.Array, shift_cols: jax.Array) -> jax.Array:
+    """C = D^{-1} C̃ E^{-1}: undo the exact power-of-two row/col scaling on the output."""
+    total = -(shift_rows[:, None] + shift_cols[None, :])
+    return jnp.ldexp(c, jnp.broadcast_to(total, c.shape))
+
+
+def np_split_hi_lo(xi: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy mirror of split_hi_lo for host-side test oracles."""
+    hi = np.round(xi / SPLIT_RADIX)
+    lo = xi - hi * SPLIT_RADIX
+    return hi.astype(np.int64), lo.astype(np.int64)

@@ -1,0 +1,251 @@
+"""The Tensor–Memory Equilibrium (TME) model — the paper's analytic contribution (§4).
+
+Classical Roofline (Williams et al.) extended with three emulation parameters:
+    α — low-precision MMAs per FP64-equivalent op (≈ r for Ozaki II; 3r on FP8; S² for
+        Ozaki I),
+    β — bandwidth multiplier (1 for fully fused on-chip decomposition; r unfused),
+    γ — per-output reconstruction latency (Garner, O(r²) small int ops).
+
+    T_nat = max(W / P_fp64, Q / B_mem)                            (paper eq. 8)
+    T_emu = max(αW / P_low, βQ / B_mem) + γ·n_out                 (paper eq. 9)
+
+This module reproduces the paper's Tables 2–5 and is also the engine behind the
+roofline analysis of the dry-runs (launch/roofline.py adds the collective term).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Table 2 — architectural parameters (TFLOPS / TOPS dense, TB/s)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    fp64_vector: float          # TFLOPS
+    fp64_tensor: Optional[float]  # TFLOPS (None if absent / emulated-only)
+    fp8: float                  # TFLOPS dense
+    int8: float                 # TOPS dense
+    bf16: float                 # TFLOPS dense
+    hbm_tbps: float             # TB/s
+    hbm_gb: float
+    ici_gbps: float = 0.0       # per-link interconnect GB/s (TPU) / NVLink share
+
+    @property
+    def native_ridge(self) -> float:
+        """Memory ridge point (FLOPs/Byte) of the native FP64 vector pipe."""
+        return self.fp64_vector / (self.hbm_tbps * 1e3 / 1e3)  # TFLOPS / (TB/s) = F/B
+
+    def fp64_matrix_native(self) -> float:
+        return self.fp64_tensor if self.fp64_tensor is not None else self.fp64_vector
+
+
+H100 = ChipSpec("H100", fp64_vector=34, fp64_tensor=67, fp8=1979, int8=1979,
+                bf16=989, hbm_tbps=3.35, hbm_gb=80)
+B200 = ChipSpec("B200", fp64_vector=40, fp64_tensor=40, fp8=4500, int8=155,
+                bf16=2250, hbm_tbps=8.0, hbm_gb=192)
+B300 = ChipSpec("B300", fp64_vector=1.3, fp64_tensor=1.2, fp8=5000, int8=165,
+                bf16=2500, hbm_tbps=8.0, hbm_gb=288)
+R200 = ChipSpec("R200", fp64_vector=33, fp64_tensor=None, fp8=4000, int8=250,
+                bf16=2000, hbm_tbps=22.0, hbm_gb=288)
+# The hardware this repo actually targets: TPU v5e (DESIGN.md §3).  No FP64 unit at
+# all — fp64_vector is the measured XLA software-emulation rate (~0.4 TFLOPS class),
+# making v5e an even starker post-FP64 design point than B300.
+TPU_V5E = ChipSpec("TPUv5e", fp64_vector=0.4, fp64_tensor=None, fp8=394, int8=394,
+                   bf16=197, hbm_tbps=0.819, hbm_gb=16, ici_gbps=50.0)
+
+CHIPS: Dict[str, ChipSpec] = {c.name: c for c in (H100, B200, B300, R200, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# Emulation parameters (Def. 1) and the two time equations
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EmulationParams:
+    alpha: float               # low-precision MMAs per FP64 op
+    beta: float = 1.0          # bandwidth multiplier (1 = fused)
+    gamma: float = 0.0         # s per output element (Garner)
+    substrate: str = "fp8"     # which P_low to use: "fp8" | "int8" | "bf16"
+
+    @staticmethod
+    def ozaki2(r: int = 10, substrate: str = "fp8", fused: bool = True,
+               fp8_planes: bool = False) -> "EmulationParams":
+        """Paper defaults: α = r; §2.4's (3r+1) plane count if fp8_planes."""
+        alpha = (3 * r + 1) if fp8_planes else r
+        return EmulationParams(alpha=alpha, beta=1.0 if fused else float(r),
+                               substrate=substrate)
+
+
+def p_low(spec: ChipSpec, substrate: str) -> float:
+    return {"fp8": spec.fp8, "int8": spec.int8, "bf16": spec.bf16}[substrate]
+
+
+def native_time(W: float, Q: float, spec: ChipSpec, matrix: bool = False) -> float:
+    """Paper eq. (8).  W in FLOPs, Q in bytes; returns seconds."""
+    p = (spec.fp64_matrix_native() if matrix else spec.fp64_vector) * 1e12
+    return max(W / p, Q / (spec.hbm_tbps * 1e12))
+
+
+def emulated_time(W: float, Q: float, n_out: float, spec: ChipSpec,
+                  params: EmulationParams) -> float:
+    """Paper eq. (9)."""
+    p = p_low(spec, params.substrate) * 1e12
+    return max(params.alpha * W / p, params.beta * Q / (spec.hbm_tbps * 1e12)) \
+        + params.gamma * n_out
+
+
+def native_perf(oi: float, spec: ChipSpec, matrix: bool = False) -> float:
+    """Attainable native FP64 TFLOPS at operational intensity ``oi``."""
+    p = spec.fp64_matrix_native() if matrix else spec.fp64_vector
+    return min(oi * spec.hbm_tbps, p)
+
+
+def emulated_perf(oi: float, spec: ChipSpec, params: EmulationParams) -> float:
+    """Attainable emulated-FP64 TFLOPS at ``oi`` (γ amortised; paper Fig. 1 curve)."""
+    ceiling = p_low(spec, params.substrate) / params.alpha
+    return min(oi * spec.hbm_tbps / params.beta, ceiling)
+
+
+def speedup(oi: float, spec: ChipSpec, params: EmulationParams,
+            matrix: bool = False) -> float:
+    return emulated_perf(oi, spec, params) / native_perf(oi, spec, matrix)
+
+
+def crossover_oi(spec: ChipSpec, params: EmulationParams) -> float:
+    """OI above which emulation beats native FP64 (paper §4.3 Case A boundary)."""
+    # native compute roof == memory roof at native ridge; emulation wins when
+    # OI * B > P_fp64 (with β=1):
+    return params.beta * spec.fp64_vector / spec.hbm_tbps
+
+
+def emulation_ridge(spec: ChipSpec, params: EmulationParams) -> float:
+    """OI at which the emulated curve leaves the memory roof (its own ridge)."""
+    return p_low(spec, params.substrate) / params.alpha / spec.hbm_tbps
+
+
+# ---------------------------------------------------------------------------
+# Workloads (Table 3 rows) and table generators
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    oi: float                  # FLOPs / byte of HBM traffic
+    matrix: bool               # True → native path uses the FP64 *tensor* rate
+
+
+WORKLOADS: Tuple[Workload, ...] = (
+    Workload("dense_gemm", 100.0, True),
+    Workload("bgemv_b8", 4.0, False),
+    Workload("bgemv_b2", 1.5, False),
+    Workload("stencil_7pt", 0.5, False),
+    Workload("spmv", 0.2, False),
+)
+
+
+def table3_speedups(r: int = 10) -> List[dict]:
+    """Projected Ozaki II/FP8-over-native speedups (paper Table 3)."""
+    rows = []
+    params = EmulationParams.ozaki2(r=r, substrate="fp8")
+    for w in WORKLOADS:
+        row = {"workload": w.name, "oi": w.oi}
+        for chip in ("H100", "B200", "B300", "R200"):
+            row[chip] = speedup(w.oi, CHIPS[chip], params, matrix=w.matrix)
+        rows.append(row)
+    return rows
+
+
+def table4_h100_baseline(r: int = 10) -> List[dict]:
+    """Absolute FP64-equivalent TFLOPS and H100-relative scaling (paper Table 4)."""
+    rows = []
+    params = EmulationParams.ozaki2(r=r, substrate="fp8")
+    h100_native = {w.name: native_perf(w.oi, H100, w.matrix) for w in WORKLOADS}
+    for w in WORKLOADS:
+        for path in ("native", "ozaki2"):
+            row = {"workload": w.name, "path": path}
+            for chip in ("H100", "B200", "B300", "R200"):
+                spec = CHIPS[chip]
+                perf = (native_perf(w.oi, spec, w.matrix) if path == "native"
+                        else emulated_perf(w.oi, spec, params))
+                row[chip] = perf
+                row[f"{chip}_vs_h100"] = perf / h100_native[w.name]
+            rows.append(row)
+    return rows
+
+
+def table5_substrates(r: int = 10) -> List[dict]:
+    """INT8 vs FP8 emulation ceilings (paper Table 5)."""
+    rows = []
+    for chip in ("H100", "B200", "B300", "R200"):
+        spec = CHIPS[chip]
+        int8_ceil = spec.int8 / r
+        fp8_ceil = spec.fp8 / r
+        rows.append({
+            "chip": chip, "p_int8": spec.int8, "p_fp8": spec.fp8,
+            "ozaki_int8_ceiling": int8_ceil, "ozaki_fp8_ceiling": fp8_ceil,
+            "fp8_advantage": fp8_ceil / int8_ceil,
+        })
+    return rows
+
+
+def moduli_sensitivity(chip: str = "B300") -> List[dict]:
+    """§2.4 sensitivity: the ceiling P_fp8/r at r = 10, 11, 12 (and with 3r+1)."""
+    spec = CHIPS[chip]
+    rows = []
+    for r in (10, 11, 12):
+        rows.append({
+            "r": r,
+            "ceiling_r": spec.fp8 / r,
+            "ceiling_3r1": spec.fp8 / (3 * r + 1),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Three-term roofline for the dry-run analysis (assignment §ROOFLINE)
+# ---------------------------------------------------------------------------
+
+# TPU v5e per-chip constants used throughout EXPERIMENTS.md.
+PEAK_BF16_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self) -> float:
+        """Useful-compute fraction if the kernel ran exactly at its bound."""
+        return self.compute_s / self.bound_s if self.bound_s > 0 else 0.0
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                   chips: int, peak_flops: float = PEAK_BF16_FLOPS,
+                   hbm_bw: float = HBM_BW, link_bw: float = ICI_BW) -> RooflineTerms:
+    """The three terms of the assignment, in seconds (totals across the mesh)."""
+    return RooflineTerms(
+        compute_s=hlo_flops / (chips * peak_flops),
+        memory_s=hlo_bytes / (chips * hbm_bw),
+        collective_s=collective_bytes / (chips * link_bw),
+    )

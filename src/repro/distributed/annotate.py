@@ -1,0 +1,50 @@
+"""Logical sharding annotations for model internals (flax "logical axes" style).
+
+GSPMD propagates shardings from weights into activations; for a few tensors that
+propagation picks pathological layouts (e.g. sharding attention head_dim from a
+fused QKV projection, which turns every score matrix into an all-reduce).  Model
+code annotates those tensors with *logical* axis names; the launcher installs a
+mesh + per-arch rule table before tracing, and ``ann`` becomes a
+with_sharding_constraint.  With no mesh installed (unit tests, examples) it is a
+no-op, keeping the model code mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh: Mesh, rules: Dict[str, object]) -> None:
+    _STATE.mesh = mesh
+    _STATE.rules = rules
+
+
+def clear() -> None:
+    _STATE.mesh = None
+    _STATE.rules = None
+
+
+def current_rules() -> Optional[Dict[str, object]]:
+    return getattr(_STATE, "rules", None)
+
+
+def rule_set(name: str) -> bool:
+    """True iff a logical axis has a mesh mapping in the installed rules."""
+    rules = getattr(_STATE, "rules", None)
+    return bool(rules) and rules.get(name) is not None
+
+
+def ann(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """Constrain x's sharding by logical axis names (None = unconstrained dim)."""
+    mesh = getattr(_STATE, "mesh", None)
+    if mesh is None:
+        return x
+    rules = _STATE.rules or {}
+    spec = P(*[rules.get(a) if a else None for a in axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,45 @@
+"""Elastic scaling: re-mesh a running job onto a different device count.
+
+The data-parallel degree changes (node failure shrinks the pod; capacity growth
+expands it); parameters and optimizer state are resharded onto the new mesh and
+the data pipeline's host->shard map is recomputed.  Because the synthetic
+pipeline is counter-based (data/pipeline.py), no data state moves at all.
+
+``reshard`` works on any pytree: device_put with the new NamedSharding tree — on
+real hardware XLA turns this into the minimal all-gather/slice exchange.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+
+Pytree = Any
+
+
+def make_mesh_for(devices, model_parallel: int) -> Mesh:
+    """Build a (data, model) mesh from an arbitrary device list."""
+    n = len(devices)
+    assert n % model_parallel == 0, (n, model_parallel)
+    arr = np.asarray(devices).reshape(n // model_parallel, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard(tree: Pytree, shardings: Pytree) -> Pytree:
+    return jax.device_put(tree, shardings)
+
+
+def elastic_remesh(cfg: ModelConfig, params: Pytree, opt_state,
+                   new_devices, model_parallel: int
+                   ) -> Tuple[Mesh, Pytree, Any]:
+    """Re-mesh params+opt onto the surviving/new device set."""
+    mesh = make_mesh_for(new_devices, model_parallel)
+    ps = sharding.param_shardings(cfg, mesh, params)
+    os_ = sharding.opt_state_shardings(cfg, mesh, opt_state, params)
+    return mesh, reshard(params, ps), reshard(opt_state, os_)

@@ -1,0 +1,89 @@
+"""Pipeline parallelism: 1F1B-style microbatch pipeline over a ``pipe`` mesh axis
+via shard_map + collective_permute.
+
+Alternative mesh layout for depth-dominated models (e.g. qwen2-vl 80L): layers
+split into ``pipe`` contiguous stages; microbatches stream through with
+activations handed between stages by collective_permute.  GPipe-schedule
+utilisation = M / (M + S - 1) for M microbatches, S stages; the steady-state
+collective per hop is (microbatch, seq, d_model) — counted by the roofline's
+collective term.
+
+This module implements the generic stage driver (stage_fn is any
+params×activation -> activation function), tested on host devices in
+tests/test_distributed.py; the full-model wiring hook is ``split_stage_params``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+Pytree = Any
+
+
+def pipeline_forward(stage_fn: Callable[[Pytree, jax.Array], jax.Array],
+                     stage_params: Pytree, x_microbatches: jax.Array,
+                     mesh: Mesh, axis: str = "pipe") -> jax.Array:
+    """Run M microbatches through S pipeline stages (GPipe schedule).
+
+    stage_params: pytree whose leaves carry a leading stage axis, sharded on
+    ``axis``; x_microbatches: (M, mb, ...) activations entering stage 0.
+    Returns the final-stage outputs (M, mb, ...).
+    """
+    S = mesh.shape[axis]
+    M = x_microbatches.shape[0]
+    total_ticks = M + S - 1
+
+    def per_stage(params, xs):
+        # params: this stage's slice (leading axis 1); xs: full (M, mb, ...)
+        params = jax.tree.map(lambda p: p[0], params)
+        stage = jax.lax.axis_index(axis)
+        fwd_perm = [(i, i + 1) for i in range(S - 1)]
+
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            mb_idx = t - stage                    # which microbatch this stage sees
+            # stage 0 ingests from xs; others from the permuted buffer
+            inject = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, M - 1), keepdims=False)
+            cur = jnp.where(stage == 0, inject, buf)
+            active = (mb_idx >= 0) & (mb_idx < M)
+            y = stage_fn(params, cur)
+            y = jnp.where(active, y, cur)
+            # last stage writes its result; others pass forward
+            outs = jax.lax.cond(
+                active & (stage == S - 1),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(mb_idx, 0, M - 1), axis=0),
+                lambda o: o, outs)
+            buf = jax.lax.ppermute(y, axis, fwd_perm)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, total_ticks, tick, (buf, outs))
+        # results live on the last stage only; psum replicates them (all other
+        # stages contributed zeros), satisfying the replicated out_spec
+        return jax.lax.psum(outs, axis)
+
+    in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
+    fn = shard_map(per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                   check_rep=False)
+    return fn(stage_params, x_microbatches)
+
+
+def split_stage_params(key, S: int, init_one: Callable[[Any], Pytree]) -> Pytree:
+    """Initialise S stage-sliced param trees stacked on a leading axis."""
+    keys = jax.random.split(key, S)
+    return jax.vmap(init_one)(keys)
+
+
+def bubble_fraction(num_microbatches: int, num_stages: int) -> float:
+    """GPipe bubble: (S-1) / (M + S - 1)."""
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)

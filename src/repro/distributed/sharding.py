@@ -1,0 +1,290 @@
+"""Sharding rules: ModelConfig + mesh -> NamedSharding trees for params, optimizer
+state, batches, and caches (DESIGN.md §5).
+
+Strategy (GSPMD partitioning via jax.jit in/out shardings):
+  * batch/sequence axes  -> ("pod", "data") (pod folds into data parallelism)
+  * embedding/vocab      -> "model"
+  * attention q/k/v/o    -> heads on "model" when divisible, else head_dim
+  * MLP                  -> column-parallel in, row-parallel out on "model"
+  * MoE experts          -> expert axis on "model" (EP)
+  * SSM/xLSTM inner dim  -> "model"
+  * optimizer moments    -> same sharding as their parameter (fully-sharded)
+  * KV caches            -> batch on ("pod","data"); kv-heads on "model" when
+                            divisible, else replicated heads + sharded head_dim
+  * long_500k (batch=1)  -> sequence sharding on "data" for train/prefill inputs
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+Pytree = Any
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _msize(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _div(n: int, d: int) -> bool:
+    return n % d == 0
+
+
+def attn_proj_spec(cfg: ModelConfig, mesh: Mesh, kv: bool) -> P:
+    """PartitionSpec for (d_model, heads*head_dim) projection weights."""
+    m = _msize(mesh)
+    heads = cfg.num_kv_heads if kv else cfg.num_heads
+    if _div(heads, m) or _div(heads * cfg.head_dim, m):
+        return P(None, "model")      # shard the fused head axis
+    return P("model", None)          # fall back: shard d_model (row-parallel)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params: Pytree,
+                layout: str = "tp") -> Pytree:
+    """Build a PartitionSpec tree matching the params tree structure.
+
+    layout="tp" (baseline): tensor-parallel on "model" + FSDP of a remaining
+    large dim on the data axes.  layout="fsdp" (beyond-paper optimisation, see
+    EXPERIMENTS.md §Perf): no tensor parallelism at all — every weight is
+    ZeRO-3-sharded across ALL mesh axes and gathered per layer at use; the
+    per-layer activation all-reduces of TP disappear entirely.  The right
+    choice is model-size dependent; both compile on every cell.
+    """
+    m = _msize(mesh)
+    daxes = _data_axes(mesh)
+    if layout == "fsdp":
+        daxes = tuple(mesh.axis_names)          # shard params over everything
+    dax: Any = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    dsize = 1
+    for a in (daxes or ()):
+        dsize *= mesh.shape[a]
+
+    def _fsdp(leaf, lead_len: int, spec_axes: Tuple) -> Tuple:
+        """Add the data axis to the first unsharded, divisible dim."""
+        if dax is None:
+            return spec_axes
+        axes = list(spec_axes)
+        for i, a in enumerate(axes):
+            if a is None and leaf.shape[lead_len + i] % dsize == 0 and \
+                    leaf.shape[lead_len + i] >= dsize:
+                axes[i] = dax
+                return tuple(axes)
+        return tuple(axes)
+
+    def _sanitize(leaf, full: Tuple) -> Tuple:
+        """Drop any sharding a dimension can't actually support."""
+        out = []
+        for i, a in enumerate(full):
+            if a is None:
+                out.append(None)
+                continue
+            size = 1
+            for ax in (a if isinstance(a, tuple) else (a,)):
+                size *= mesh.shape[ax]
+            out.append(a if leaf.shape[i] % size == 0 else None)
+        return tuple(out)
+
+    def spec_for(path: str, leaf) -> P:
+        nd = leaf.ndim
+        # stacked period params have a leading periods axis -> prepend None
+        lead = (None,) if "stack" in path or path.startswith("encoder") else ()
+
+        def mk(*axes):
+            axes = axes + (None,) * (nd - len(lead) - len(axes))
+            if layout == "fsdp":              # strip TP placements entirely
+                axes = tuple(None if a == "model" else a for a in axes)
+            full = _sanitize(leaf, lead + tuple(axes))
+            if nd - len(lead) >= 2 or (layout == "fsdp" and nd - len(lead) >= 1):
+                axes = _fsdp(leaf, len(lead), full[len(lead):])
+                full = _sanitize(leaf, lead + tuple(axes))
+            return P(*full[:nd])
+
+        if "embed/table" in path or "lm_head" in path:
+            # vocab on model: table (V, d) -> P("model", None); lm_head (d, V)
+            if "lm_head" in path:
+                return mk(None, "model")
+            return mk("model", None)
+        if "enc_pos" in path:
+            return mk(None, None)
+        if "norm" in path or path.endswith("scale"):
+            return mk(None)
+        if "router" in path:
+            return mk(None, None)
+        if "experts" in path:
+            return mk("model", None, None)       # expert-parallel
+        if "mixer/wq" in path or "mixer/wk" in path or "mixer/wv" in path or \
+                "cross/wq" in path or "cross/wk" in path or "cross/wv" in path:
+            kv = "/wk" in path or "/wv" in path
+            base = attn_proj_spec(cfg, mesh, kv)
+            return mk(*base)
+        if "mixer/wo" in path or "cross/wo" in path:
+            # (heads*head_dim, d_model): transpose of the qkv rule
+            base = attn_proj_spec(cfg, mesh, kv=False)
+            return mk(*reversed(tuple(base)))
+        if "wi_gate" in path or "wi_up" in path or "in_proj" in path or \
+                "up_proj" in path or "w_in" in path or "wq" in path or \
+                "wk" in path or "wv" in path or "w_if" in path or \
+                "x_proj" in path:
+            return mk(None, "model")             # column parallel
+        if "wo" in path or "out_proj" in path or "down_proj" in path or \
+                "r_in" in path:
+            return mk("model", None)             # row parallel
+        if "conv_w" in path or "a_log" in path or "dt_bias" in path or \
+                "d_skip" in path:
+            # per-channel SSM params: shard the d_inner axis where present
+            if nd - len(lead) >= 1 and _div(leaf.shape[-1], m):
+                return mk(*([None] * (nd - len(lead) - 1) + ["model"]))
+            return mk(*([None] * (nd - len(lead))))
+        return mk(*([None] * (nd - len(lead))))
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        specs[key] = spec_for(key, leaf)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+            for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, [specs[k] for k in keys])
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params: Pytree,
+                    layout: str = "tp") -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params, layout))
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh,
+                  layout: str = "tp", kvseq: Any = None) -> Dict[str, Any]:
+    """Logical-axis -> mesh-axis table for in-model annotations (annotate.py).
+
+    Attention strategy (tp): shard q-heads on "model" when divisible; otherwise
+    fall back to context-parallel attention (sequence on "model", heads
+    replicated) — never let GSPMD shard head_dim into the score contraction.
+    fsdp layout: pure data parallelism — batch over ALL axes, no model axes.
+    """
+    m = _msize(mesh)
+    daxes = _data_axes(mesh)
+    if layout == "fsdp":
+        alldax = tuple(mesh.axis_names)
+        return {
+            "batch": alldax if len(alldax) > 1 else alldax[0],
+            "heads": None, "kv_heads": None, "aseq": None,
+            "ff": None, "expert": None, "vocab": None, "kvseq": kvseq,
+        }
+    dax: Any = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    heads_ok = _div(cfg.num_heads, m)
+    kv_ok = _div(cfg.num_kv_heads, m)
+    return {
+        "batch": dax,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "aseq": None if heads_ok else "model",   # context-parallel fallback
+        "ff": "model",
+        "expert": "model",
+        "vocab": "model",
+        "kvseq": kvseq,          # decode cache sequence (batch=1 cells: "data")
+    }
+
+
+def install_annotations(cfg: ModelConfig, mesh: Mesh,
+                        layout: str = "tp", kvseq: Any = None) -> None:
+    from repro.distributed import annotate
+    annotate.set_mesh(mesh, logical_rules(cfg, mesh, layout, kvseq))
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, opt_state: Dict,
+                        params: Pytree, layout: str = "tp") -> Dict:
+    ps = param_shardings(cfg, mesh, params, layout)
+    return {
+        "m": ps, "v": ps,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                batch: Dict, layout: str = "tp") -> Dict:
+    """Input shardings: batch on data axes; batch=1 cells shard sequence."""
+    daxes = tuple(mesh.axis_names) if layout == "fsdp" else _data_axes(mesh)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    out = {}
+    for k, v in batch.items():
+        shp = v.shape
+        if k == "pos" or v.ndim == 0:
+            out[k] = P()
+        elif shp[0] == 1 and v.ndim >= 2 and shp[1] > 1:
+            # batch=1 (long_500k): shard the sequence axis instead (SP)
+            out[k] = P(None, dax, *([None] * (v.ndim - 2)))
+        else:
+            out[k] = P(dax, *([None] * (v.ndim - 1)))
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    batch: Dict, layout: str = "tp") -> Dict:
+    return {k: NamedSharding(mesh, s)
+            for k, s in batch_specs(cfg, shape, mesh, batch, layout).items()}
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache: Pytree,
+                batch_size: int) -> Pytree:
+    """KV/state cache shardings: batch on data axes (or sequence if batch==1),
+    kv-heads on model when divisible else head_dim."""
+    m = _msize(mesh)
+    daxes = _data_axes(mesh)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    dsize = 1
+    for a in (daxes or ()):
+        dsize *= mesh.shape[a]
+
+    def spec_for(path: str, leaf) -> P:
+        nd = leaf.ndim
+        lead = (None,) if "stack" in path else ()
+        n = nd - len(lead)
+
+        def mk(*axes):
+            full = lead + tuple(axes) + (None,) * (nd - len(lead) - len(axes))
+            return P(*full[:nd])
+
+        if n == 0:
+            return P()
+        batch_ok = _div(batch_size, max(dsize, 1)) and batch_size >= dsize
+        bax = dax if batch_ok else None
+        if ("kv/k" in path or "kv/v" in path or "cross_kv" in path) and n == 4:
+            # (B, S, Hkv, D)
+            if _div(cfg.num_kv_heads, m):
+                return mk(bax, None, "model", None)
+            if not batch_ok and _div(leaf.shape[len(lead) + 1], max(dsize, 1)):
+                return mk(None, dax, None, "model" if _div(cfg.head_dim, m)
+                          else None)
+            return mk(bax, None, None, "model" if _div(cfg.head_dim, m)
+                      else None)
+        # SSM states: (B, d_inner, d_state) / (B, H, dk, dv) / (B, di)
+        if n >= 2:
+            d1 = leaf.shape[len(lead) + 1]
+            return mk(bax, "model" if _div(d1, m) else None)
+        return mk(bax)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+    specs = [spec_for(k, leaf) for k, (path, leaf) in zip(keys, flat)]
+    treedef = jax.tree_util.tree_structure(cache)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache: Pytree,
+                    batch_size: int) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cfg, mesh, cache, batch_size))

@@ -1,0 +1,138 @@
+"""Shared in-kernel primitives for the fused Ozaki-II Pallas kernels.
+
+The β→1 discipline (paper §5.1) in TPU terms: operands enter the kernel as (hi, lo)
+int32 pairs (8 B/elem — the same HBM traffic as native FP64); residue planes are
+computed *inside* the kernel in VMEM/VREGs and never round-trip to HBM; the Garner
+reconstruction runs on the int32 accumulators before the store.
+
+Output representations (the one place the TPU adaptation pays a real cost, since
+Mosaic has no float64 type):
+  f64    — full in-kernel double-double Garner.  Bit-equivalent to the XLA reference;
+           valid in interpret mode (this container) and on backends with f64.
+  digits — TPU-production mode: the kernel stores the r balanced mixed-radix digits
+           as int8 (r bytes/output vs 8 for f64) and a cheap bandwidth-bound XLA
+           epilogue finishes the double-double Horner.  β_out = r/8.
+  ds     — two-float32 double-single output (8 B/output, β_out = 1) with ~49-bit
+           accuracy: full-bandwidth mode for consumers that tolerate 2^-45 error.
+
+All helpers are shape-polymorphic jnp code so they trace identically inside
+pl.pallas_call (interpret or Mosaic) and in the XLA reference path.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import moduli as moduli_lib
+from repro.core import ozaki2
+from repro.core.moduli import SPLIT_RADIX
+
+OUT_REPS = ("f64", "digits", "ds")
+
+
+def balanced_mod(v: jax.Array, m: int) -> jax.Array:
+    u = jnp.remainder(v, m)
+    return jnp.where(u > (m - 1) // 2, u - m, u)
+
+
+def residues_int32(hi: jax.Array, lo: jax.Array, moduli: Sequence[int]) -> List[jax.Array]:
+    """Balanced residues of x = hi*2^26 + lo per modulus; int32-only arithmetic."""
+    outs = []
+    for m in moduli:
+        v = balanced_mod(hi, m) * (SPLIT_RADIX % m) + balanced_mod(lo, m)
+        outs.append(balanced_mod(v, m))
+    return outs
+
+
+def garner_digits(accs: Sequence[jax.Array], plan: ozaki2.Plan) -> List[jax.Array]:
+    """Balanced mixed-radix digits v_j (int32 arrays) from per-modulus accumulators."""
+    gc = plan.garner
+    ms = plan.moduli
+    r = plan.r
+    carry = [jnp.zeros_like(accs[0]) for _ in range(r)]
+    digits: List[jax.Array] = []
+    for j in range(r):
+        t = balanced_mod((balanced_mod(accs[j], ms[j]) - carry[j])
+                         * int(gc.inv_pref[j]), ms[j])
+        digits.append(t)
+        for l in range(j + 1, r):
+            carry[l] = balanced_mod(carry[l] + t * int(gc.pref_mod[j, l]), ms[l])
+    return digits
+
+
+def digits_to_f64(digits: Sequence[jax.Array], plan: ozaki2.Plan,
+                  out_dtype=jnp.float64) -> jax.Array:
+    """Compensated double-double Horner over the digits (the reconstruction epilogue)."""
+    gc = plan.garner
+    out = jnp.zeros(digits[0].shape, out_dtype)
+    comp = jnp.zeros(digits[0].shape, out_dtype)
+    split_bits = 27 if out_dtype == jnp.float64 else 12
+    split_c = (2.0 ** split_bits + 1.0)
+    for j, t in enumerate(digits):
+        tf = t.astype(out_dtype)
+        ph = jnp.asarray(gc.pref_f64[j], out_dtype)
+        p = tf * ph
+        # two_prod(tf, ph) inline (Veltkamp)
+        c1 = split_c * tf
+        tf_h = c1 - (c1 - tf)
+        tf_l = tf - tf_h
+        c2 = split_c * ph
+        ph_h = c2 - (c2 - ph)
+        ph_l = ph - ph_h
+        e = ((tf_h * ph_h - p) + tf_h * ph_l + tf_l * ph_h) + tf_l * ph_l
+        e = e + tf * jnp.asarray(gc.pref_f64_lo[j], out_dtype)
+        # two_sum(out, p)
+        s = out + p
+        v = s - out
+        comp = comp + ((out - (s - v)) + (p - v)) + e
+        out = s
+    return out + comp
+
+
+def digits_to_ds(digits: Sequence[jax.Array], plan: ozaki2.Plan
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Double-single (f32, f32) reconstruction — the β_out = 1 TPU fast path.
+
+    Full double-single arithmetic: each prefix product is carried as an exact
+    (hi, lo) f32 pair and each digit term uses a Veltkamp two_prod, so the result
+    holds ~45-48 significant bits (vs 24 for a naive f32 Horner).
+    """
+    gc = plan.garner
+    split_c = jnp.float32(2.0 ** 12 + 1.0)
+    hi = jnp.zeros(digits[0].shape, jnp.float32)
+    lo = jnp.zeros(digits[0].shape, jnp.float32)
+    for j, t in enumerate(digits):
+        tf = t.astype(jnp.float32)
+        ph_np = np.float32(gc.pref_f64[j])
+        ph = jnp.asarray(ph_np)
+        pl_ = jnp.asarray(np.float32(gc.pref_f64[j] - np.float64(ph_np)))
+        # two_prod(tf, ph) in f32
+        p = tf * ph
+        c1 = split_c * tf
+        tf_h = c1 - (c1 - tf)
+        tf_l = tf - tf_h
+        c2 = split_c * ph
+        ph_h = c2 - (c2 - ph)
+        ph_l = ph - ph_h
+        e = ((tf_h * ph_h - p) + tf_h * ph_l + tf_l * ph_h) + tf_l * ph_l
+        e = e + tf * pl_
+        # two_sum(hi, p)
+        s = hi + p
+        v = s - hi
+        lo = lo + ((hi - (s - v)) + (p - v)) + e
+        hi = s
+    s = hi + lo
+    lo = lo - (s - hi)
+    return s, lo
+
+
+def stack_digits_int8(digits: Sequence[jax.Array]) -> jax.Array:
+    return jnp.stack([d.astype(jnp.int8) for d in digits], axis=0)
+
+
+def unstack_digits(d8: jax.Array) -> List[jax.Array]:
+    return [d8[j].astype(jnp.int32) for j in range(d8.shape[0])]

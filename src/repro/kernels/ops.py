@@ -1,0 +1,137 @@
+"""Jit'd public wrappers for the fused Ozaki-II Pallas kernels.
+
+Each wrapper performs the cheap streaming pre/post work (Phase-1 scaling, hi/lo
+split, padding to block multiples, digit epilogue, exact unscale) and invokes the
+fused kernel.  ``interpret`` defaults to True on CPU (this container); on a TPU
+backend the same code lowers through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ozaki2, splitting
+from repro.kernels import common
+from repro.kernels import ozaki_gemm as _gemm
+from repro.kernels import ozaki_gemv as _gemv
+from repro.kernels import ozaki_spmv as _spmv
+from repro.kernels import ozaki_stencil as _stencil
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x: jax.Array, bm: int, bn: int) -> jax.Array:
+    M, N = x.shape
+    pm, pn = (-M) % bm, (-N) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _working_f64():
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+def _finish(raw: jax.Array, plan: ozaki2.Plan, out_rep: str,
+            shape: Tuple[int, int]) -> jax.Array:
+    """Epilogue: raw kernel output -> scaled-integer product as working float."""
+    M, N = shape
+    if out_rep == "f64":
+        return raw[:M, :N]
+    if out_rep == "ds":
+        return (raw[0].astype(_working_f64())
+                + raw[1].astype(_working_f64()))[:M, :N]
+    if out_rep == "digits":
+        digits = common.unstack_digits(raw)
+        return common.digits_to_f64(digits, plan, out_dtype=_working_f64())[:M, :N]
+    raise ValueError(out_rep)
+
+
+def ozaki_gemm(a: jax.Array, b: jax.Array, plan: Optional[ozaki2.Plan] = None,
+               out_rep: str = "f64", bm: int = 128, bn: int = 128, bk: int = 256,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """FP64-accurate C = A @ B through the fused Pallas kernel."""
+    M, K = a.shape
+    _, N = b.shape
+    if plan is None:
+        plan = ozaki2.make_plan(K)
+    if interpret is None:
+        interpret = _default_interpret()
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    f64 = _working_f64()
+
+    ai, sa = splitting.scale_to_int(a.astype(f64), plan.payload_bits, axis=-1)
+    bi, sb = splitting.scale_to_int(b.astype(f64), plan.payload_bits, axis=0)
+    a_hi, a_lo = splitting.split_hi_lo(ai)
+    b_hi, b_lo = splitting.split_hi_lo(bi)
+    a_hi, a_lo = _pad2(a_hi, bm, bk), _pad2(a_lo, bm, bk)
+    b_hi, b_lo = _pad2(b_hi, bk, bn), _pad2(b_lo, bk, bn)
+
+    raw = _gemm.gemm_hilo(a_hi, a_lo, b_hi, b_lo, plan, out_rep=out_rep,
+                          bm=bm, bn=bn, bk=bk, interpret=interpret)
+    c = _finish(raw, plan, out_rep, (M, N))
+    return splitting.apply_unscale(c, sa, sb)
+
+
+def ozaki_gemv(a: jax.Array, x: jax.Array, plan: Optional[ozaki2.Plan] = None,
+               out_rep: str = "f64", bm: int = 128, bk: int = 256,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Batched GEMV Y = A @ X (paper Alg. 1): A (M,N) fp64, X (N,B) with small B."""
+    M, N = a.shape
+    _, B = x.shape
+    if plan is None:
+        plan = ozaki2.make_plan(N)
+    if interpret is None:
+        interpret = _default_interpret()
+    bm, bk = min(bm, M), min(bk, N)
+    f64 = _working_f64()
+
+    ai, sa = splitting.scale_to_int(a.astype(f64), plan.payload_bits, axis=-1)
+    xi, sx = splitting.scale_to_int(x.astype(f64), plan.payload_bits, axis=0)
+    a_hi, a_lo = splitting.split_hi_lo(ai)
+    x_hi, x_lo = splitting.split_hi_lo(xi)
+    a_hi, a_lo = _pad2(a_hi, bm, bk), _pad2(a_lo, bm, bk)
+    x_hi, x_lo = _pad2(x_hi, bk, B), _pad2(x_lo, bk, B)
+
+    raw = _gemv.gemv_hilo(a_hi, a_lo, x_hi, x_lo, plan, out_rep=out_rep,
+                          bm=bm, bk=bk, interpret=interpret)
+    y = _finish(raw, plan, out_rep, (M, B))
+    return splitting.apply_unscale(y, sa, sx)
+
+
+def ozaki_stencil7(u: jax.Array, c: jax.Array,
+                   plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
+                   bz: int = 8, interpret: Optional[bool] = None) -> jax.Array:
+    """Fused 7-point 3-D stencil (paper Alg. 2) at FP64 accuracy.
+
+    u: (X, Y, Z) grid, c: (7,) coefficients ordered
+    [centre, -x, +x, -y, +y, -z, +z].  Boundary points use zero halo.
+    """
+    if plan is None:
+        plan = ozaki2.make_plan(8, margin_bits=4)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _stencil.stencil7(u, c, plan, out_rep=out_rep, bz=bz,
+                             interpret=interpret)
+
+
+def ozaki_spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
+                    plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
+                    br: int = 128, interpret: Optional[bool] = None) -> jax.Array:
+    """Blocked-ELL SpMV y = A x (paper Alg. 3).
+
+    a_val: (M, bw) padded per-row nonzero values; a_col: (M, bw) int32 column
+    indices (structural-zero slots must point at a valid column, value 0.0).
+    """
+    if plan is None:
+        plan = ozaki2.make_plan(a_val.shape[1], margin_bits=4)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep, br=br,
+                           interpret=interpret)

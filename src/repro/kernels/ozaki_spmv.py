@@ -1,0 +1,116 @@
+"""Fused Ozaki-II Blocked-ELL SpMV Pallas kernel (paper §5.4, Algorithm 3).
+
+y = A·x with A in Blocked-ELL layout: ``a_val (M, bw)`` padded nonzero values and
+``a_col (M, bw)`` gather indices.  Each program handles a block of ``br`` rows:
+stream the value block, gather x, residue-decompose both in VMEM, contract the
+bw-length products per modulus, Garner, store.
+
+TPU adaptation notes (DESIGN.md §3):
+  * the dense vector x stays fully VMEM-resident as an (hi, lo) int32 pair
+    (8 B/element; for N = 1M that is 8 MiB — well within v5e VMEM), which is the
+    shared-memory-tile assumption of Algorithm 3;
+  * the gather x[a_col] is expressed as a vector gather; on Mosaic this lowers to
+    dynamic-gather (supported for minor-dim gathers) — the one-hot-matmul fallback
+    documented in DESIGN.md is not needed in interpret mode;
+  * β inherits the ELL padding ratio ρ_pad exactly as Appendix D derives — the
+    kernel adds nothing on top (residues never touch HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ozaki2, splitting
+from repro.kernels import common
+from repro.kernels.ozaki_stencil import _global_scale_to_int
+
+
+def _spmv_kernel(av_hi_ref, av_lo_ref, col_ref, x_hi_ref, x_lo_ref, out_ref, *,
+                 plan: ozaki2.Plan, out_rep: str):
+    cols = col_ref[...]                      # (br, bw) int32
+    xg_hi = x_hi_ref[...][cols]              # VMEM gather
+    xg_lo = x_lo_ref[...][cols]
+
+    a_res = common.residues_int32(av_hi_ref[...], av_lo_ref[...], plan.moduli)
+    x_res = common.residues_int32(xg_hi, xg_lo, plan.moduli)
+
+    accs = []
+    for i, m in enumerate(plan.moduli):
+        prod = a_res[i] * x_res[i]           # (br, bw) int32, |.| <= 128*128
+        accs.append(common.balanced_mod(jnp.sum(prod, axis=-1), m))
+
+    digits = common.garner_digits(accs, plan)
+    if out_rep == "f64":
+        out_ref[...] = common.digits_to_f64(digits, plan)
+    elif out_rep == "ds":
+        hi, lo = common.digits_to_ds(digits, plan)
+        out_ref[0] = hi
+        out_ref[1] = lo
+    else:
+        out_ref[...] = common.stack_digits_int8(digits)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "out_rep", "br", "interpret"))
+def spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
+              plan: ozaki2.Plan, out_rep: str = "f64", br: int = 128,
+              interpret: bool = True) -> jax.Array:
+    M, bw = a_val.shape
+    N = x.shape[0]
+    f64 = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    br = min(br, M)
+    pm = (-M) % br
+
+    av, sa = splitting.scale_to_int(a_val.astype(f64), plan.payload_bits, axis=-1)
+    xi, sx = _global_scale_to_int(x.astype(f64), plan.payload_bits)
+    av_hi, av_lo = splitting.split_hi_lo(av)
+    x_hi, x_lo = splitting.split_hi_lo(xi)
+    col = a_col.astype(jnp.int32)
+    if pm:
+        av_hi = jnp.pad(av_hi, ((0, pm), (0, 0)))
+        av_lo = jnp.pad(av_lo, ((0, pm), (0, 0)))
+        col = jnp.pad(col, ((0, pm), (0, 0)))
+        sa = jnp.pad(sa, (0, pm))
+    Mp = M + pm
+    grid = (Mp // br,)
+
+    in_specs = [
+        pl.BlockSpec((br, bw), lambda i: (i, 0)),
+        pl.BlockSpec((br, bw), lambda i: (i, 0)),
+        pl.BlockSpec((br, bw), lambda i: (i, 0)),
+        pl.BlockSpec((N,), lambda i: (0,)),     # x fully VMEM-resident
+        pl.BlockSpec((N,), lambda i: (0,)),
+    ]
+    if out_rep == "f64":
+        out_shape = jax.ShapeDtypeStruct((Mp,), jnp.float64)
+        out_spec = pl.BlockSpec((br,), lambda i: (i,))
+    elif out_rep == "ds":
+        out_shape = jax.ShapeDtypeStruct((2, Mp), jnp.float32)
+        out_spec = pl.BlockSpec((2, br), lambda i: (0, i))
+    elif out_rep == "digits":
+        out_shape = jax.ShapeDtypeStruct((plan.r, Mp), jnp.int8)
+        out_spec = pl.BlockSpec((plan.r, br), lambda i: (0, i))
+    else:
+        raise ValueError(f"out_rep must be one of {common.OUT_REPS}")
+
+    kernel = functools.partial(_spmv_kernel, plan=plan, out_rep=out_rep)
+    raw = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(av_hi, av_lo, col, x_hi, x_lo)
+
+    if out_rep == "f64":
+        y = raw[:M]
+    elif out_rep == "ds":
+        y = (raw[0].astype(f64) + raw[1].astype(f64))[:M]
+    else:
+        y = common.digits_to_f64(common.unstack_digits(raw), plan,
+                                 out_dtype=f64)[:M]
+    return jnp.ldexp(y, jnp.broadcast_to(-(sa[:M] + sx), y.shape))

@@ -1,0 +1,159 @@
+"""Fused Ozaki-II 7-point stencil Pallas kernel (paper §5.3, Algorithm 2).
+
+im2col-in-registers mapping: per z-slab, the 7-point neighbourhood of every output
+is assembled in VMEM, residue-decomposed, and contracted against the pre-decomposed
+coefficient residues (the paper's constant-memory table — here a tiny (r, 7) int8
+operand) with a 1×7×N_tile int8 MXU contraction per modulus.
+
+Halo handling without β inflation: the z-axis is blocked and each program receives
+the *previous*, *current* and *next* slabs of the same array through three
+BlockSpecs with clamped index maps — the TPU equivalent of a halo'd shared-memory
+tile (re-reads hit the same HBM pages the neighbouring programs stream anyway; the
+paper's §5.3 traffic model already counts them as cached).  Global-boundary planes
+are masked to the zero halo inside the kernel.
+
+HBM traffic per output: 8 B in (hi+lo int32) + 8 B out (f64 mode) — exactly the
+native-FP64 footprint, β = 1 (out_rep="digits" pays r/8 instead, see common.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ozaki2, splitting
+from repro.kernels import common
+
+
+def _global_scale_to_int(x: jax.Array, payload_bits: int):
+    absmax = jnp.max(jnp.abs(x))
+    e = jnp.floor(jnp.log2(jnp.where(absmax > 0, absmax, 1.0)))
+    shift = (payload_bits - 1) - e.astype(jnp.int32)
+    scaled = jnp.ldexp(x, jnp.broadcast_to(shift, x.shape))
+    too_big = jnp.max(jnp.abs(scaled)) >= 2.0 ** payload_bits
+    shift = shift - too_big.astype(jnp.int32)
+    scaled = jnp.where(too_big, scaled * 0.5, scaled)
+    return jnp.round(scaled), shift
+
+
+def _stencil_kernel(c_res_ref, u_hi_p, u_lo_p, u_hi_c, u_lo_c, u_hi_n, u_lo_n,
+                    out_ref, *, plan: ozaki2.Plan, out_rep: str, z_steps: int):
+    zidx = pl.program_id(0)
+    X, Y, bz = u_hi_c.shape
+
+    def neighborhood(cur, prev, nxt):
+        """Stack the 7-point neighbourhood: [centre, -x, +x, -y, +y, -z, +z]."""
+        def roll_mask(arr, ax, d):
+            rolled = jnp.roll(arr, d, axis=ax)
+            idx = [slice(None)] * 3
+            idx[ax] = 0 if d == 1 else -1
+            return rolled.at[tuple(idx)].set(0)
+
+        zm = jnp.concatenate([prev[:, :, -1:], cur[:, :, :-1]], axis=2)
+        zm = jnp.where(zidx == 0,
+                       zm.at[:, :, 0].set(0), zm)  # global -z boundary
+        zp = jnp.concatenate([cur[:, :, 1:], nxt[:, :, :1]], axis=2)
+        zp = jnp.where(zidx == z_steps - 1,
+                       zp.at[:, :, -1].set(0), zp)  # global +z boundary
+        return jnp.stack([
+            cur,
+            roll_mask(cur, 0, 1), roll_mask(cur, 0, -1),
+            roll_mask(cur, 1, 1), roll_mask(cur, 1, -1),
+            zm, zp,
+        ], axis=0)  # (7, X, Y, bz)
+
+    nb_hi = neighborhood(u_hi_c[...], u_hi_p[...], u_hi_n[...])
+    nb_lo = neighborhood(u_lo_c[...], u_lo_p[...], u_lo_n[...])
+
+    # im2col: (7, X*Y*bz) residue planes contracted against (1, 7) coefficients.
+    nb_hi2 = nb_hi.reshape(7, -1)
+    nb_lo2 = nb_lo.reshape(7, -1)
+    u_res = common.residues_int32(nb_hi2, nb_lo2, plan.moduli)
+
+    accs = []
+    for i, m in enumerate(plan.moduli):
+        ci = c_res_ref[i].reshape(1, 7)  # constant-memory analogue
+        part = jax.lax.dot_general(
+            ci.astype(jnp.int8), u_res[i].astype(jnp.int8),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        accs.append(common.balanced_mod(part.reshape(X, Y, bz), m))
+
+    digits = common.garner_digits(accs, plan)
+    if out_rep == "f64":
+        out_ref[...] = common.digits_to_f64(digits, plan)
+    elif out_rep == "ds":
+        hi, lo = common.digits_to_ds(digits, plan)
+        out_ref[0] = hi
+        out_ref[1] = lo
+    else:
+        out_ref[...] = common.stack_digits_int8(digits)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "out_rep", "bz", "interpret"))
+def stencil7(u: jax.Array, c: jax.Array, plan: ozaki2.Plan,
+             out_rep: str = "f64", bz: int = 8, interpret: bool = True) -> jax.Array:
+    X, Y, Z = u.shape
+    f64 = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    bz = min(bz, Z)
+    pz = (-Z) % bz
+    ui, su = _global_scale_to_int(u.astype(f64), plan.payload_bits)
+    ci, sc = _global_scale_to_int(c.astype(f64), plan.payload_bits)
+    u_hi, u_lo = splitting.split_hi_lo(ui)
+    if pz:
+        u_hi = jnp.pad(u_hi, ((0, 0), (0, 0), (0, pz)))
+        u_lo = jnp.pad(u_lo, ((0, 0), (0, 0), (0, pz)))
+    c_hi, c_lo = splitting.split_hi_lo(ci)
+    c_res = jnp.stack(common.residues_int32(c_hi, c_lo, plan.moduli)).astype(jnp.int8)
+
+    Zp = Z + pz
+    z_steps = Zp // bz
+    grid = (z_steps,)
+
+    def spec(offset):
+        # clamped halo slabs: offset -1 (prev), 0 (cur), +1 (next)
+        if offset == -1:
+            return pl.BlockSpec((X, Y, bz),
+                                lambda k: (0, 0, jnp.maximum(k - 1, 0)))
+        if offset == 1:
+            return pl.BlockSpec((X, Y, bz),
+                                lambda k: (0, 0, jnp.minimum(k + 1, z_steps - 1)))
+        return pl.BlockSpec((X, Y, bz), lambda k: (0, 0, k))
+
+    in_specs = [pl.BlockSpec((plan.r, 7), lambda k: (0, 0)),
+                spec(-1), spec(-1), spec(0), spec(0), spec(1), spec(1)]
+
+    if out_rep == "f64":
+        out_shape = jax.ShapeDtypeStruct((X, Y, Zp), jnp.float64)
+        out_spec = pl.BlockSpec((X, Y, bz), lambda k: (0, 0, k))
+    elif out_rep == "ds":
+        out_shape = jax.ShapeDtypeStruct((2, X, Y, Zp), jnp.float32)
+        out_spec = pl.BlockSpec((2, X, Y, bz), lambda k: (0, 0, 0, k))
+    elif out_rep == "digits":
+        out_shape = jax.ShapeDtypeStruct((plan.r, X, Y, Zp), jnp.int8)
+        out_spec = pl.BlockSpec((plan.r, X, Y, bz), lambda k: (0, 0, 0, k))
+    else:
+        raise ValueError(f"out_rep must be one of {common.OUT_REPS}")
+
+    kernel = functools.partial(_stencil_kernel, plan=plan, out_rep=out_rep,
+                               z_steps=z_steps)
+    raw = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(c_res, u_hi, u_lo, u_hi, u_lo, u_hi, u_lo)
+
+    if out_rep == "f64":
+        v = raw[:, :, :Z]
+    elif out_rep == "ds":
+        v = (raw[0].astype(f64) + raw[1].astype(f64))[:, :, :Z]
+    else:
+        v = common.digits_to_f64(common.unstack_digits(raw), plan,
+                                 out_dtype=f64)[:, :, :Z]
+    return jnp.ldexp(v, jnp.broadcast_to(-(su + sc), v.shape))

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two tiers of reference:
+  * ``*_f64`` — the true float64 result (accuracy oracle; the §2.5 error bound is
+    asserted against this).
+  * ``repro.core.ozaki2.emulated_matmul`` — the unfused XLA implementation of the
+    same arithmetic; the fused kernels in f64 output mode must match it
+    BIT-EXACTLY (same scaling, same residues, same Garner), which pins down every
+    integer step of the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_f64(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float64), b.astype(jnp.float64))
+
+
+def gemv_f64(a: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float64), x.astype(jnp.float64))
+
+
+def stencil7_f64(u: jax.Array, c: jax.Array) -> jax.Array:
+    """7-point stencil with zero halo; c = [centre, -x, +x, -y, +y, -z, +z]."""
+    u = u.astype(jnp.float64)
+    c = c.astype(jnp.float64)
+    z = jnp.zeros_like(u)
+
+    def shift(arr, ax, d):
+        return jnp.roll(arr, d, axis=ax)
+
+    def masked(arr, ax, d):
+        rolled = jnp.roll(arr, d, axis=ax)
+        idx = [slice(None)] * 3
+        idx[ax] = 0 if d == 1 else -1
+        rolled = rolled.at[tuple(idx)].set(0.0)
+        return rolled
+
+    return (c[0] * u
+            + c[1] * masked(u, 0, 1) + c[2] * masked(u, 0, -1)
+            + c[3] * masked(u, 1, 1) + c[4] * masked(u, 1, -1)
+            + c[5] * masked(u, 2, 1) + c[6] * masked(u, 2, -1))
+
+
+def spmv_bell_f64(a_val: jax.Array, a_col: jax.Array, x: jax.Array) -> jax.Array:
+    """Blocked-ELL SpMV oracle: y_i = sum_j a_val[i,j] * x[a_col[i,j]]."""
+    gathered = x.astype(jnp.float64)[a_col]
+    return jnp.sum(a_val.astype(jnp.float64) * gathered, axis=-1)

@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every runnable (architecture × input-shape) cell, lower + compile the real
+step function (train_step for train shapes, model.apply for prefill, decode_step
+for decode shapes) against the production mesh — 16x16 single-pod and 2x16x16
+multi-pod — with ShapeDtypeStruct inputs (no allocation), then record
+memory_analysis / cost_analysis / collective bytes for the roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, SHAPES_BY_NAME
+from repro.distributed import sharding
+from repro.launch import cost_model, roofline
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models.transformer import Model
+from repro.optim import adamw
+from repro.train.loop import make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+TRAIN_MICROBATCH = 4   # production default: fits the 16 GB/chip HBM budget
+
+
+def _step_fn_and_specs(cfg, shape, model):
+    """The pure step function + abstract inputs for this cell (no sharding)."""
+    batch_specs = registry.input_specs(cfg, shape)
+    if shape.kind == "train":
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        opt_shape = jax.eval_shape(adamw.adamw_init, params_shape)
+        step = make_train_step(
+            model, opt_cfg=adamw.AdamWConfig(moment_dtype="bfloat16"),
+            microbatch=TRAIN_MICROBATCH, unroll=cfg.force_unroll)
+        return step, (params_shape, opt_shape, batch_specs)
+    if shape.kind == "prefill":
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        return model.apply, (params_shape, batch_specs)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    return model.decode_step, (params_shape, cache_shape,
+                               batch_specs["tokens"], batch_specs["pos"])
+
+
+def jaxpr_costs(arch, shape_name, policy="bf16"):
+    """Exact global FLOPs + fusion-aware HBM traffic (both scan-aware), plus the
+    inner-recurrence state-traffic correction for xLSTM-style mixers."""
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = registry.get_config(arch, policy_name=policy)
+    fn, specs = _step_fn_and_specs(cfg, shape, Model(cfg))
+    stats = cost_model.count(fn, *specs)
+    flops = stats["flops"]
+    hbm = stats["hbm_bytes"]
+    scan_bytes = 0.0
+    if any(b.mixer in ("mlstm", "slstm") for b in cfg.pattern):
+        # re-trace with unrolled outer loops so only the truly-sequential inner
+        # step recurrences contribute state traffic.  lstm_chunk -> whole seq:
+        # a single S-step scan has identical state traffic to S/c chunks of c
+        # steps, without unrolling thousands of chunk bodies at trace time.
+        cfg_u = registry.get_config(arch, policy_name=policy, force_unroll=True,
+                                    lstm_chunk=1 << 30)
+        fn_u, specs_u = _step_fn_and_specs(cfg_u, shape, Model(cfg_u))
+        scan_bytes = cost_model.count(fn_u, *specs_u)["scan_state_bytes"]
+    return flops, hbm + scan_bytes
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               policy_name: str = "bf16", donate: bool = True,
+               layout: str = "tp", microbatch: int = None,
+               **cfg_overrides):
+    """Lower + compile one (arch × shape × mesh) cell.  Returns (compiled, meta)."""
+    cfg = registry.get_config(arch, policy_name=policy_name, **cfg_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = registry.cell_is_runnable(arch, shape)
+    if not ok:
+        raise SystemExit(f"SKIP {arch}/{shape_name}: {why}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    model = Model(cfg)
+    # §Perf H2b (refuted): passing kvseq="data" to force cache-sharded decode
+    # attention made GSPMD *re-gather* the cache for the masked write (641 GB
+    # vs 248 GB) — the one-hot write alone (H2, 3.7x) is the keeper.  The
+    # annotation path remains available for future iteration.
+    sharding.install_annotations(cfg, mesh, layout, kvseq=None)
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(model.init, key)
+    pspecs = sharding.param_shardings(cfg, mesh, params_shape, layout)
+    batch_specs = registry.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+        opt_shape = jax.eval_shape(
+            lambda p: adamw.adamw_init(p, opt_cfg), params_shape)
+        ospecs = sharding.opt_state_shardings(cfg, mesh, opt_shape,
+                                              params_shape, layout)
+        bspecs = sharding.batch_shardings(cfg, shape, mesh, batch_specs,
+                                          layout)
+        # cost-extraction compiles (force_unroll) use microbatch=1: identical
+        # arithmetic volume, far smaller HLO (memory uses the production value).
+        mb = microbatch or TRAIN_MICROBATCH
+        step = make_train_step(model, opt_cfg=opt_cfg,
+                               microbatch=1 if cfg.force_unroll else mb,
+                               unroll=cfg.force_unroll)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pspecs, ospecs, bspecs),
+            out_shardings=(pspecs, ospecs, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        lowered = jitted.lower(params_shape, opt_shape, batch_specs)
+    elif shape.kind == "prefill":
+        bspecs = sharding.batch_shardings(cfg, shape, mesh, batch_specs,
+                                          layout)
+        jitted = jax.jit(model.apply, in_shardings=(pspecs, bspecs))
+        lowered = jitted.lower(params_shape, batch_specs)
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = sharding.cache_shardings(cfg, mesh, cache_shape,
+                                          shape.global_batch)
+        tok = batch_specs["tokens"]
+        pos = batch_specs["pos"]
+        daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+        tok_sh = NamedSharding(
+            mesh, P(dax, None) if shape.global_batch >= chips // mesh.shape["model"]
+            else P())
+        jitted = jax.jit(
+            model.decode_step,
+            in_shardings=(pspecs, cspecs, tok_sh, NamedSharding(mesh, P())),
+            out_shardings=(None, cspecs),
+            donate_argnums=(1,) if donate else (),
+        )
+        lowered = jitted.lower(params_shape, cache_shape, tok, pos)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": chips, "compile_s": compile_s,
+            "policy": policy_name, "layout": layout}
+    return compiled, cfg, shape, meta
+
+
+def raw_costs(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    coll, by_kind = roofline.collective_bytes_from_hlo(compiled.as_text())
+    return flops, hlo_bytes, coll, by_kind
+
+
+def peak_bytes(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            return float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return None
+
+
+def scaled_costs(arch, shape_name, multi_pod, policy, cfg, layout="tp",
+                 microbatch=None):
+    """Scan-corrected bytes/collectives: XLA's HloCostAnalysis visits a while
+    body ONCE, so the scanned full-depth compile under-counts by the trip count.
+    We compile force-unrolled 1-period and 2-period variants (cheap — inner
+    chunk loops unroll too) and scale:
+        total = A + (B - A) * (num_layers/period - 1)
+    The unrolled HLO per layer is identical to the scan body, so the scaling is
+    exact up to boundary-fusion noise; non-divisible tails are prorated."""
+    period = cfg.period
+    # attn_chunk=0 (direct) and single SSM/LSTM chunks: byte-equivalent, much
+    # smaller HLO (the inner-recurrence correction handles the time scans).
+    simplify = dict(force_unroll=True, attn_chunk=0, ssm_chunk=1 << 30,
+                    lstm_chunk=1 << 30)
+    ov_a = dict(num_layers=period, **simplify)
+    ov_b = dict(num_layers=2 * period, **simplify)
+    if cfg.family == "encdec":
+        ov_a["encoder_layers"] = 1
+        ov_b["encoder_layers"] = 2
+    ca, _, _, _ = lower_cell(arch, shape_name, multi_pod, policy_name=policy,
+                             layout=layout, microbatch=microbatch, **ov_a)
+    cb, _, _, _ = lower_cell(arch, shape_name, multi_pod, policy_name=policy,
+                             layout=layout, microbatch=microbatch, **ov_b)
+    fa, ba, cla, ka = raw_costs(ca)
+    fb, bb, clb, kb = raw_costs(cb)
+    reps = cfg.num_layers / period - 1.0
+    flops = fa + (fb - fa) * reps
+    hbytes = ba + (bb - ba) * reps
+    coll = cla + (clb - cla) * reps
+    kinds = {k: ka.get(k, 0.0) + (kb.get(k, 0.0) - ka.get(k, 0.0)) * reps
+             for k in set(ka) | set(kb)}
+    return flops, hbytes, coll, kinds
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir=None, policy="bf16",
+             donate=True, costs="scaled", layout="tp", microbatch=None,
+             tag_extra=""):
+    """Full-depth compile (the deliverable: sharding coherence + memory) plus
+    scan-corrected cost extraction for the roofline.
+
+    Accounting: compiled-artifact numbers are PER-DEVICE (the SPMD-partitioned
+    module); jaxpr FLOPs are GLOBAL.  Everything is stored as mesh totals so the
+    assignment's term formulas (divide by chips) apply directly.
+    """
+    compiled, cfg, shape, meta = lower_cell(arch, shape_name, multi_pod,
+                                            policy_name=policy, donate=donate,
+                                            layout=layout,
+                                            microbatch=microbatch)
+    chips = meta["chips"]
+    if costs == "scaled":
+        _, xla_bytes_pd, coll_pd, kinds_pd = scaled_costs(
+            arch, shape_name, multi_pod, policy, cfg, layout, microbatch)
+        flops, hbytes = jaxpr_costs(arch, shape_name, policy)
+        coll = coll_pd * chips
+        kinds = {k: v * chips for k, v in kinds_pd.items()}
+        kinds["xla_bytes_accessed_crosscheck"] = xla_bytes_pd * chips
+    else:
+        flops_pd, hbytes_pd, coll_pd, kinds_pd = raw_costs(compiled)
+        flops = flops_pd * chips
+        hbytes = hbytes_pd * chips
+        coll = coll_pd * chips
+        kinds = {k: v * chips for k, v in kinds_pd.items()}
+    rep = roofline.CellReport(
+        arch=arch, shape=shape_name, mesh=meta["mesh"], chips=chips,
+        hlo_flops=flops, hlo_bytes=hbytes, collective_bytes=coll,
+        collective_by_kind=kinds, per_device_peak_bytes=peak_bytes(compiled),
+        model_flops=roofline.model_flops_for(cfg, shape),
+    ).finish()
+    rec = {**rep.to_json(), **meta}
+    print(json.dumps(rec))
+    try:
+        ma = compiled.memory_analysis()
+        print(f"# memory_analysis: {ma}", file=sys.stderr)
+    except Exception as e:
+        print(f"# memory_analysis unavailable: {e}", file=sys.stderr)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{meta['mesh']}" + \
+            (f"_{policy}" if policy != "bf16" else "") + \
+            (f"_{layout}" if layout != "tp" else "") + tag_extra
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=registry.list_archs())
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="bf16")
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    cells = (registry.runnable_cells() if args.all
+             else [(args.arch, SHAPES_BY_NAME[args.shape])])
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                # roofline costs are single-pod; multi-pod proves the "pod"
+                # axis shards (compile success + memory) with raw costs only.
+                run_cell(arch, shape.name, mp, out_dir=args.out,
+                         policy=args.policy, donate=not args.no_donate,
+                         costs="raw" if mp else "scaled",
+                         layout=args.layout, microbatch=args.microbatch)
+            except SystemExit as e:
+                print(str(e), file=sys.stderr)
+            except Exception:
+                failures.append((arch, shape.name, mp))
+                traceback.print_exc()
+    if failures:
+        print(f"FAILED cells: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Render the §Perf hypothesis→change→measure log from baseline + perf JSONs.
+
+    PYTHONPATH=src python -m repro.launch.perf_report
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+from repro.core import tme
+
+
+def load(path: str) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def frac(r: Dict) -> float:
+    useful = r["model_flops"] / (r["chips"] * tme.PEAK_BF16_FLOPS)
+    return useful / max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+
+def bound_ms(r: Dict) -> float:
+    return 1e3 * max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+
+def diff_row(name: str, base: Dict, new: Dict, hypothesis: str) -> str:
+    imp = bound_ms(base) / bound_ms(new) if bound_ms(new) else float("inf")
+    peak_b = base.get("per_device_peak_bytes") or 0
+    peak_n = new.get("per_device_peak_bytes") or 0
+    return (
+        f"### {name}\n"
+        f"*Hypothesis*: {hypothesis}\n\n"
+        f"| | compute ms | memory ms | collective ms | dominant | bound ms | "
+        f"roofline frac | peak GB/dev |\n|---|---|---|---|---|---|---|---|\n"
+        f"| before | {base['compute_s']*1e3:.2f} | {base['memory_s']*1e3:.2f} | "
+        f"{base['collective_s']*1e3:.2f} | {base['dominant']} | "
+        f"{bound_ms(base):.2f} | {frac(base):.4f} | {peak_b/1e9:.1f} |\n"
+        f"| after | {new['compute_s']*1e3:.2f} | {new['memory_s']*1e3:.2f} | "
+        f"{new['collective_s']*1e3:.2f} | {new['dominant']} | "
+        f"{bound_ms(new):.2f} | {frac(new):.4f} | {peak_n/1e9:.1f} |\n\n"
+        f"*Measured*: bound time {bound_ms(base):.2f} -> {bound_ms(new):.2f} ms "
+        f"(**{imp:.1f}x**); roofline fraction {frac(base):.4f} -> "
+        f"{frac(new):.4f}.\n"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="experiments/dryrun")
+    ap.add_argument("--perf", default="experiments/perf")
+    args = ap.parse_args()
+
+    cases = [
+        ("H1 yi-6b/train_4k: FSDP(ZeRO-3) layout instead of TP=16",
+         "yi-6b_train_4k_16x16.json", "yi-6b_train_4k_16x16_fsdp.json",
+         "TP=16 pays ~2 f32 (B,S,d) all-reduces per layer (~646 GB/dev/step); "
+         "pure ZeRO-3 over all 256 chips replaces them with per-layer bf16 "
+         "weight all-gathers (~8 GB/dev/step) — predict ~30x collective cut, "
+         "new bound = memory term."),
+        ("H2 gemma3-4b/long_500k: one-hot masked cache write",
+         "gemma3-4b_long_500k_16x16.json", "gemma3-4b_long_500k_16x16.json",
+         "dynamic_update_slice on the sequence-sharded KV ring buffer makes "
+         "GSPMD reshuffle the cache through 688 GB of all-to-all per token; an "
+         "elementwise one-hot masked write is local under any sharding — "
+         "predict the all-to-all term vanishes and the cell becomes "
+         "memory/latency-bound (the correct regime for decode)."),
+        ("H3 qwen2-vl-72b/train_4k: FSDP layout + microbatch 8",
+         "qwen2-vl-72b_train_4k_16x16.json",
+         "qwen2-vl-72b_train_4k_16x16_fsdp.json",
+         "At 72B the TP=16 all-reduces cost 59.5 s/step and the cell misses "
+         "HBM (75 GB/dev).  ZeRO-3 weight gathers cost ~72e9*2B*3/256 = 1.7 "
+         "GB/dev; microbatch 8 halves activation peaks — predict fits + "
+         ">5x bound cut."),
+        ("H4 yi-6b/train_4k under the paper-faithful ozaki2_int8 policy",
+         "yi-6b_train_4k_16x16.json", "yi-6b_train_4k_16x16_ozaki2_int8.json",
+         "Routing every weight matmul through Ozaki-II multiplies matmul "
+         "FLOPs by alpha=r(k) and adds residue/Garner elementwise work; the "
+         "TME model predicts the compute term grows ~16x while memory/"
+         "collective stay put — measuring alpha end-to-end on a full training "
+         "step validates the paper's Def. 1 cost model at system scale."),
+    ]
+    for name, b, n, hyp in cases:
+        base = load(os.path.join(args.base, b))
+        new = load(os.path.join(args.perf, n))
+        if base and new:
+            print(diff_row(name, base, new, hyp))
+        else:
+            print(f"### {name}\n(pending: {b if not base else n})\n")
+
+
+if __name__ == "__main__":
+    main()

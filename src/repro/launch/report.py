@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md roofline tables from the dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.core import tme
+
+HEADER = ("| arch | shape | mesh | HLO FLOPs | HBM bytes | coll bytes | "
+          "compute ms | memory ms | coll ms | dominant | 6ND/HLO | "
+          "roofline frac | fits 16GB |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def row(r: Dict) -> str:
+    useful_s = r["model_flops"] / (r["chips"] * tme.PEAK_BF16_FLOPS)
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    frac = useful_s / bound if bound else 0.0
+    peak = r.get("per_device_peak_bytes")
+    fits = "?" if peak is None else ("yes" if peak < 16e9 else
+                                     f"NO ({peak/1e9:.0f}GB)")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['hlo_flops']:.3g} | {r['hlo_bytes']:.3g} | "
+            f"{r['collective_bytes']:.3g} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.3f} | {frac:.4f} | {fits} |")
+
+
+def load(dirname: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = [r for r in load(args.dir) if r["mesh"] == args.mesh
+            and r.get("policy", "bf16") == "bf16"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    print(HEADER)
+    for r in recs:
+        print(row(r))
+    # summary: worst roofline fraction / most collective-bound
+    def frac(r):
+        useful = r["model_flops"] / (r["chips"] * tme.PEAK_BF16_FLOPS)
+        return useful / max(r["compute_s"], r["memory_s"], r["collective_s"])
+    if recs:
+        worst = min(recs, key=frac)
+        collb = max(recs, key=lambda r: r["collective_s"]
+                    / max(r["compute_s"], r["memory_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"= {frac(worst):.4f}")
+        print(f"most collective-bound: {collb['arch']}/{collb['shape']} "
+              f"(coll/compute = "
+              f"{collb['collective_s']/max(collb['compute_s'],1e-12):.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Roofline term extraction from compiled dry-run artifacts (assignment §ROOFLINE).
+
+Terms (seconds, per the assignment's TPU v5e constants):
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * 50e9)
+
+collective_bytes is parsed from the *post-SPMD* optimized HLO (compiled.as_text())
+— GSPMD materialises the collectives there — summing the moved bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute, with
+per-op traffic weights (all-reduce counts 2x: reduce-scatter + all-gather phases).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import tme
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result-type(s) then opcode, e.g.:
+#   %ag = bf16[8,1024]{1,0} all-gather(bf16[8,64]{1,0} %x), ...
+#   %t  = (f32[8]{0}, f32[8]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Sum per-device moved bytes over all collectives in optimized HLO."""
+    by_kind: Dict[str, float] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        result_type, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":       # paired with -start; count once
+            continue
+        nbytes = _type_bytes(result_type)
+        if kind == "all-reduce":
+            moved = 2 * nbytes               # reduce-scatter + all-gather phases
+        elif kind == "all-gather":
+            moved = nbytes                   # ring: recv ~= result bytes
+        else:                                # reduce-scatter / a2a / permute
+            moved = nbytes
+        by_kind[kind] = by_kind.get(kind, 0.0) + moved
+    return sum(by_kind.values()), by_kind
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+    per_device_peak_bytes: Optional[float]
+    model_flops: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0
+
+    def finish(self) -> "CellReport":
+        terms = tme.roofline_terms(self.hlo_flops, self.hlo_bytes,
+                                   self.collective_bytes, self.chips)
+        self.compute_s = terms.compute_s
+        self.memory_s = terms.memory_s
+        self.collective_s = terms.collective_s
+        self.dominant = terms.dominant
+        self.useful_ratio = (self.model_flops / self.hlo_flops
+                             if self.hlo_flops else 0.0)
+        return self
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute time / bound time — the score the perf pass moves."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        useful_s = self.model_flops / (self.chips * tme.PEAK_BF16_FLOPS)
+        return useful_s / bound if bound > 0 else 0.0
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for train (N = active params, D = tokens);
+    2*N*D for forward-only prefill; 2*N*batch for one decode step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch    # decode: one token per sequence
+
+
+def render_markdown_row(r: CellReport) -> str:
+    return (f"| {r.arch} | {r.shape} | {r.mesh} | "
+            f"{r.hlo_flops:.3g} | {r.hlo_bytes:.3g} | {r.collective_bytes:.3g} | "
+            f"{r.compute_s * 1e3:.2f} | {r.memory_s * 1e3:.2f} | "
+            f"{r.collective_s * 1e3:.2f} | {r.dominant} | "
+            f"{r.useful_ratio:.3f} | {r.roofline_fraction:.3f} |")

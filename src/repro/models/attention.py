@@ -1,0 +1,219 @@
+"""GQA attention with sliding windows, cross-attention, and ring-buffer KV caches.
+
+Shapes: activations (B, S, d_model); q (B, S, H, D); k/v (B, S, Hkv, D).
+GQA groups H // Hkv query heads per KV head.  Sliding-window layers keep a cache
+of only ``window`` positions (ring buffer) — this is what makes gemma3's
+long_500k decode cell memory-feasible (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import Policy
+from repro.distributed.annotate import ann
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.param_jnp_dtype
+    return {
+        "wq": layers.dense_init(kq, d, cfg.num_heads * cfg.head_dim, dt),
+        "wk": layers.dense_init(kk, d, cfg.num_kv_heads * cfg.head_dim, dt),
+        "wv": layers.dense_init(kv, d, cfg.num_kv_heads * cfg.head_dim, dt),
+        "wo": layers.dense_init(ko, cfg.num_heads * cfg.head_dim, d, dt),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, d))
+
+
+def _qkv(params: Dict, x: jax.Array, kv_x: jax.Array, cfg: ModelConfig,
+         policy: Policy):
+    q = _split_heads(layers.dense_apply(params["wq"], x, policy),
+                     cfg.num_heads, cfg.head_dim)
+    k = _split_heads(layers.dense_apply(params["wk"], kv_x, policy),
+                     cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(layers.dense_apply(params["wv"], kv_x, policy),
+                     cfg.num_kv_heads, cfg.head_dim)
+    # Never let GSPMD shard head_dim into the score contraction (DESIGN.md §5):
+    # q-heads on "model" when divisible, else context-parallel (seq on "model").
+    q = ann(q, ("batch", "aseq", "heads", None))
+    k = ann(k, ("batch", None, "kv_heads", None))
+    v = ann(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B,S,H,D) x (B,T,Hkv,D) -> (B, Hkv, H/Hkv, S, T)."""
+    g = cfg.num_heads // cfg.num_kv_heads
+    B, S = q.shape[0], q.shape[1]
+    qg = q.reshape(B, S, cfg.num_kv_heads, g, cfg.head_dim)
+    return jnp.einsum("bsngd,btnd->bngst", qg, k) / math.sqrt(cfg.head_dim)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, _, g, S, _ = probs.shape
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+    return out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+
+
+def _causal_window_mask(s: int, t: int, window: int, offset: int = 0) -> jax.Array:
+    """Mask (s, t): query i (absolute pos i+offset) attends to key j iff
+    j <= i+offset and (window == 0 or i+offset - j < window)."""
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(t)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    return ok
+
+
+def _attn_direct(q, k, v, cfg: ModelConfig, window: int, causal: bool,
+                 dtype) -> jax.Array:
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+    scores = layers.softcap(scores, cfg.logit_softcap)
+    if causal:
+        mask = _causal_window_mask(q.shape[1], k.shape[1], window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    B, S = q.shape[0], q.shape[1]
+    out = jnp.einsum("bngst,btnd->bsngd",
+                     probs.reshape(B, cfg.num_kv_heads,
+                                   cfg.num_heads // cfg.num_kv_heads, S, -1),
+                     v)
+    return out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+
+
+def _attn_chunked(q, k, v, cfg: ModelConfig, window: int, dtype,
+                  chunk: int, unroll: bool) -> jax.Array:
+    """Flash-style online-softmax over q-blocks: peak activation is
+    O(chunk * T) per head instead of O(S * T).  Causal only (train/prefill)."""
+    B, S, H, D = q.shape
+    n = cfg.num_kv_heads
+    g = H // n
+    nchunks = S // chunk
+    qb = q.reshape(B, nchunks, chunk, H, D)
+    scale = 1.0 / math.sqrt(D)
+
+    def one_chunk(ci, qc):
+        # qc: (B, chunk, H, D); keys/values full (B, T, n, D)
+        qg = qc.reshape(B, chunk, n, g, D)
+        s = jnp.einsum("bsngd,btnd->bngst", qg, k).astype(jnp.float32) * scale
+        s = layers.softcap(s, cfg.logit_softcap)
+        mask = _causal_window_mask(chunk, k.shape[1], window, offset=ci * chunk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(dtype)
+        o = jnp.einsum("bngst,btnd->bsngd", p, v)
+        return o.reshape(B, chunk, H * D)
+
+    # per-chunk remat: backward recomputes one chunk's scores at a time, so the
+    # live set is O(chunk*T) regardless of how many chunks the map saves.
+    one_chunk = jax.checkpoint(one_chunk, static_argnums=())
+
+    if unroll:
+        outs = [one_chunk(ci, qb[:, ci]) for ci in range(nchunks)]
+        return jnp.stack(outs, 1).reshape(B, S, H * D)
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(nchunks), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H * D)
+
+
+def attn_apply(params: Dict, x: jax.Array, cfg: ModelConfig, policy: Policy,
+               sin: jax.Array, cos: jax.Array, window: int = 0,
+               causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _qkv(params, x, x, cfg, policy)
+    if cfg.rope_type != "none":
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+    S = q.shape[1]
+    if causal and cfg.attn_chunk and S > cfg.attn_chunk and \
+            S % cfg.attn_chunk == 0:
+        attn_out = _attn_chunked(q, k, v, cfg, window, x.dtype,
+                                 cfg.attn_chunk, cfg.force_unroll)
+    else:
+        attn_out = _attn_direct(q, k, v, cfg, window, causal, x.dtype)
+    return layers.dense_apply(params["wo"], attn_out, policy)
+
+
+def cross_attn_apply(params: Dict, x: jax.Array, enc_out: jax.Array,
+                     cfg: ModelConfig, policy: Policy) -> jax.Array:
+    """Encoder-decoder cross attention (no RoPE, no mask)."""
+    q, k, v = _qkv(params, x, enc_out, cfg, policy)
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    return layers.dense_apply(params["wo"], _gqa_out(probs, v, cfg), policy)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg: ModelConfig, batch: int, seq_len: int, window: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Ring-buffer cache: capacity = window for sliding layers else seq_len."""
+    cap = min(window, seq_len) if window > 0 else seq_len
+    shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode_step(params: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
+                     cfg: ModelConfig, policy: Policy, sin: jax.Array,
+                     cos: jax.Array, window: int = 0) -> Tuple[jax.Array, Dict]:
+    """One-token decode: x (B, 1, d); pos scalar int32 (current position).
+
+    The KV cache is a ring buffer of capacity C (= window or full seq); the new
+    K/V is written at pos % C; queries attend to all valid slots with the ring
+    distance mask.
+    """
+    q, k, v = _qkv(params, x, x, cfg, policy)
+    if cfg.rope_type != "none":
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+    cap = cache["k"].shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+    # one-hot masked write instead of dynamic_update_slice: elementwise, so it
+    # stays LOCAL under a sequence-sharded cache (a dynamic slice on a sharded
+    # dim makes GSPMD reshuffle the whole cache through all-to-alls — measured
+    # at 688 GB/step on the gemma3 long_500k cell; see EXPERIMENTS.md §Perf).
+    sel = (jnp.arange(cap) == slot).astype(cache["k"].dtype)[None, :, None, None]
+    ck = cache["k"] * (1 - sel) + k.astype(cache["k"].dtype) * sel
+    cv = cache["v"] * (1 - sel) + v.astype(cache["v"].dtype) * sel
+    # Long-context (batch=1) decode: keep the cache sequence-sharded through
+    # the attention math (partial softmax reductions are tiny vs gathering the
+    # cache — §Perf H2 measured 248 GB/step otherwise).  Only applied when the
+    # launcher installs a "kvseq" mapping: a PartitionSpec None dim *forces*
+    # replication, which would regress the batch-sharded decode cells.
+    from repro.distributed.annotate import rule_set
+    if rule_set("kvseq"):
+        # batch is 1 in this regime — never mapped (duplicate-axis hazard)
+        ck = ann(ck, (None, "kvseq", "kv_heads", None))
+        cv = ann(cv, (None, "kvseq", "kv_heads", None))
+        scores = _gqa_scores(q, ck.astype(q.dtype), cfg).astype(jnp.float32)
+        scores = ann(scores, (None, "kv_heads", None, None, "kvseq"))
+    else:
+        scores = _gqa_scores(q, ck.astype(q.dtype), cfg).astype(jnp.float32)
+    scores = layers.softcap(scores, cfg.logit_softcap)
+    # slot j holds absolute position p_j = j + cap * floor over ring history;
+    # valid iff p_j <= pos and pos - p_j < cap (ring) and p_j within window.
+    j = jnp.arange(cap)
+    # absolute position currently stored in slot j:
+    pj = jnp.where(j <= slot, pos - slot + j, pos - slot + j - cap)
+    ok = (pj >= 0) & (pj <= pos)
+    if window > 0:
+        ok &= (pos - pj) < window
+    scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = layers.dense_apply(params["wo"],
+                             _gqa_out(probs, cv.astype(x.dtype), cfg), policy)
+    return out, {"k": ck, "v": cv}

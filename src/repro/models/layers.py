@@ -1,0 +1,147 @@
+"""Core layers (functional style — params are plain dict pytrees).
+
+Every weight matmul routes through the precision policy (repro.core.policy), which
+is how the paper's technique becomes a first-class framework feature: the same
+model runs on the native bf16 MXU path or at FP64-equivalent accuracy on the
+Ozaki-II int8/fp8 path by flipping ``ModelConfig.policy_name``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import Policy
+from repro.distributed.annotate import ann
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Dict:
+    scale = 1.0 / math.sqrt(d_in)
+    return {"w": jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)}
+
+
+def dense_apply(params: Dict, x: jax.Array, policy: Policy) -> jax.Array:
+    return policy.dot(x, params["w"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm_apply(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, act: str = "swiglu") -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["wi_gate"] = dense_init(k1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: Dict, x: jax.Array, policy: Policy,
+              act: str = "swiglu") -> jax.Array:
+    # batch stays data-sharded; hidden is model-sharded (Megatron col->row).
+    # The constraints force GSPMD into FSDP weight-gathering rather than
+    # batch-replicating partial-sum plans (see DESIGN.md §5).  Rank-adaptive:
+    # MoE shared experts call this on flattened (tokens, d) activations.
+    mid = (None,) * (x.ndim - 2)
+    up = ann(dense_apply(params["wi_up"], x, policy), ("batch",) + mid + ("ff",))
+    if act == "swiglu":
+        h = jax.nn.silu(dense_apply(params["wi_gate"], x, policy)) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(dense_apply(params["wi_gate"], x, policy),
+                        approximate=True) * up
+    elif act == "relu2":        # minitron/nemotron squared-ReLU, non-gated
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(act)
+    return ann(dense_apply(params["wo"], h, policy),
+               ("batch",) + mid + (None,))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype) -> Dict:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed_apply(params: Dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return ann(params["table"].astype(compute_dtype)[tokens],
+               ("batch", None, None))
+
+
+def unembed_apply(params: Dict, x: jax.Array, policy: Policy) -> jax.Array:
+    """Logits = x @ table^T (tied) — f32 output for a stable softmax/xent."""
+    logits = policy.dot(x, params["table"].astype(x.dtype).T).astype(jnp.float32)
+    return ann(logits, ("batch", None, "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> (sin, cos) of shape (..., S, head_dim // 2), f32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def mrope_angles(positions3: jax.Array, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: three position streams (t, h, w) own disjoint frequency
+    sections of the rotary half-space.  positions3: (B, 3, S)."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)           # (half,) stream owner
+    p = positions3.astype(jnp.float32)                      # (B, 3, S)
+    pos_per_freq = p[:, sec_id, :]                          # (B, half, S)
+    ang = jnp.swapaxes(pos_per_freq, 1, 2) * inv_freq       # (B, S, half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); sin/cos: (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None]
+        cos = cos[None]
+    s = sin[:, :, None, :].astype(x.dtype)
+    c = cos[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits

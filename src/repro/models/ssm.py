@@ -1,0 +1,358 @@
+"""State-space and recurrent mixers: Mamba (jamba) and xLSTM (sLSTM / mLSTM).
+
+All are attention-free, state-carrying mixers, which is what makes the hybrid /
+SSM architectures runnable at the long_500k decode shape: decode state is O(1) in
+sequence length (DESIGN.md §5).
+
+Memory discipline (the production-framework part):
+  * Mamba: time is processed in ``ssm_chunk`` blocks — an outer sequential scan
+    carries the (B, d_inner, d_state) boundary state, an inner associative scan
+    parallelises within the chunk.  Peak activation is O(B·chunk·d_inner·d_state)
+    instead of O(B·S·d_inner·d_state).
+  * mLSTM / sLSTM: outer chunk scan + inner step scan; with per-period remat the
+    backward pass re-runs one chunk at a time, so the per-step matrix-memory
+    residuals (B,H,dh,dh) are only ever live for ``lstm_chunk`` steps.
+  * sLSTM uses head-blocked recurrence (R is block-diagonal per head, as in the
+    xLSTM paper) — the head axis shards on "model" with no collectives inside
+    the time loop.
+
+Under ``cfg.force_unroll`` (dry-run cost extraction) the outer chunk loops are
+Python loops, so XLA's once-per-while-body cost analysis sees every chunk.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import Policy
+from repro.models import layers
+
+
+def _chunk_scan(chunk_fn, init_state, xs_tree, nchunks: int, unroll: bool,
+                remat: bool):
+    """Outer sequential scan over time-chunks.  xs_tree leaves: (B, nchunks, ...)."""
+    fn = jax.checkpoint(chunk_fn) if remat else chunk_fn
+    if unroll:
+        state = init_state
+        outs = []
+        for c in range(nchunks):
+            xc = jax.tree.map(lambda t: t[:, c], xs_tree)
+            state, yc = fn(state, xc)
+            outs.append(yc)
+        return state, jnp.stack(outs, axis=1)
+    xs_t = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), xs_tree)
+    state, ys = jax.lax.scan(lambda s, xc: fn(s, xc), init_state, xs_t)
+    return state, jnp.moveaxis(ys, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig) -> Dict:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim
+    dt = cfg.param_jnp_dtype
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, di), dt) * 0.1,
+        "x_proj": layers.dense_init(ks[2], di, 2 * ds + 1, dt),  # B, C, dt
+        "dt_bias": jnp.zeros((di,), dt),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), dt),
+        "out_proj": layers.dense_init(ks[3], di, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv over time.  x (B, S, di); w (K, di)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+K-1, di)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def _mamba_bcd(params, xin, cfg):
+    ds = cfg.ssm_state_dim
+    bcd = xin.astype(jnp.float32)
+    Bm, Cm, dt_raw = bcd[..., :ds], bcd[..., ds:2 * ds], bcd[..., -1:]
+    dt = jax.nn.softplus(
+        dt_raw + params["dt_bias"].astype(jnp.float32)[..., :1].mean())
+    return Bm, Cm, dt
+
+
+def mamba_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
+                policy: Policy) -> jax.Array:
+    """Chunked selective scan: outer chunk recurrence + inner associative scan."""
+    B, S, _ = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state_dim
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk:
+        chunk = S
+    nchunks = S // chunk
+
+    xz = layers.dense_apply(params["in_proj"], x, policy)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, _ = _causal_conv(xin, params["conv_w"].astype(x.dtype))
+    xin = jax.nn.silu(xin)
+    bcd = layers.dense_apply(params["x_proj"], xin, policy)
+    Bm, Cm, dt = _mamba_bcd(params, bcd, cfg)
+    A = -jnp.exp(params["a_log"])                          # (di, ds)
+    xf32 = xin.astype(jnp.float32)
+
+    dA = jnp.exp(dt[..., None] * A[None, None])            # (B,S,di,ds)
+    dBx = (dt * xf32)[..., None] * Bm[:, :, None, :]       # (B,S,di,ds)
+
+    def combine(a, b):
+        return a[0] * b[0], b[0] * a[1] + b[1]
+
+    def chunk_fn(h0, xc):
+        dAc, dBxc, Cc = xc                                  # (B,chunk,di,ds), (B,chunk,ds)
+        gA, gB = jax.lax.associative_scan(combine, (dAc, dBxc), axis=1)
+        h = gA * h0[:, None] + gB                           # inject boundary state
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cc)
+        return h[:, -1], y
+
+    def rs(t):
+        return t.reshape(B, nchunks, chunk, *t.shape[2:])
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, y = _chunk_scan(chunk_fn, h0, (rs(dA), rs(dBx), rs(Cm)), nchunks,
+                       unroll=cfg.force_unroll, remat=cfg.remat)
+    y = y.reshape(B, S, di)
+    y = y + xf32 * params["d_skip"].astype(jnp.float32)[None, None]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return layers.dense_apply(params["out_proj"], y, policy)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode_step(params: Dict, x: jax.Array, state: Dict, cfg: ModelConfig,
+                      policy: Policy) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent update.  x (B, 1, d)."""
+    xz = layers.dense_apply(params["in_proj"], x, policy)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _causal_conv(xin, params["conv_w"].astype(x.dtype),
+                                   state["conv"])
+    xin = jax.nn.silu(xin)
+    bcd = layers.dense_apply(params["x_proj"], xin, policy)
+    Bm, Cm, dt = _mamba_bcd(params, bcd, cfg)
+    A = -jnp.exp(params["a_log"])
+    xf = xin.astype(jnp.float32)[:, 0]                      # (B, di)
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])               # (B,di,ds)
+    dBx = (dt[:, 0] * xf)[..., None] * Bm[:, 0, None, :]
+    h = state["h"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + xf * params["d_skip"].astype(jnp.float32)[None]
+    y = (y * jax.nn.silu(z.astype(jnp.float32)[:, 0]))[:, None].astype(x.dtype)
+    out = layers.dense_apply(params["out_proj"], y, policy)
+    return out, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory, head-blocked)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.num_heads
+    dt = cfg.param_jnp_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "up_proj": layers.dense_init(ks[0], d, 2 * di, dt),
+        "wq": layers.dense_init(ks[1], di, di, dt),
+        "wk": layers.dense_init(ks[2], di, di, dt),
+        "wv": layers.dense_init(ks[3], di, di, dt),
+        "w_if": layers.dense_init(ks[4], di, 2 * H, dt),    # input/forget gates
+        "down_proj": layers.dense_init(ks[5], di, d, dt),
+    }
+
+
+def _mlstm_heads(x, H):
+    B, S, di = x.shape
+    return x.reshape(B, S, H, di // H)
+
+
+def _mlstm_step(carry, inp, scale):
+    C, n, m = carry                                  # (B,H,dh,dh),(B,H,dh),(B,H)
+    qt, kt, vt, it, ft = inp
+    m_new = jnp.maximum(ft + m, it)                  # stabilised exp gating
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    C = f_[..., None, None] * C + i_[..., None, None] * (
+        kt[..., :, None] * vt[..., None, :])
+    n = f_[..., None] * n + i_[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt * scale, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt * scale, n))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
+                policy: Policy) -> jax.Array:
+    """Chunked mLSTM: outer chunk scan (remat boundary) + inner step scan."""
+    H = cfg.num_heads
+    B, S, _ = x.shape
+    up = layers.dense_apply(params["up_proj"], x, policy)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = _mlstm_heads(layers.dense_apply(params["wq"], xi, policy), H)
+    k = _mlstm_heads(layers.dense_apply(params["wk"], xi, policy), H)
+    v = _mlstm_heads(layers.dense_apply(params["wv"], xi, policy), H)
+    gates = layers.dense_apply(params["w_if"], xi, policy).astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                   # (B,S,H)
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    chunk = min(cfg.lstm_chunk, S)
+    if S % chunk:
+        chunk = S
+    nchunks = S // chunk
+
+    def chunk_fn(carry, xc):
+        qc, kc, vc, ic, fc = xc                             # (B, chunk, ...)
+        def step(c, inp):
+            return _mlstm_step(c, inp, scale)
+        carry, hs = jax.lax.scan(
+            step, carry,
+            (qc.swapaxes(0, 1).astype(jnp.float32),
+             kc.swapaxes(0, 1).astype(jnp.float32),
+             vc.swapaxes(0, 1).astype(jnp.float32),
+             ic.swapaxes(0, 1), fc.swapaxes(0, 1)))
+        return carry, hs.swapaxes(0, 1)                     # (B, chunk, H, dh)
+
+    def rs(t):
+        return t.reshape(B, nchunks, chunk, *t.shape[2:])
+
+    init = (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    _, hs = _chunk_scan(chunk_fn, init, (rs(q), rs(k), rs(v), rs(ig), rs(fg)),
+                        nchunks, unroll=cfg.force_unroll, remat=cfg.remat)
+    h = hs.reshape(B, S, -1).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    return layers.dense_apply(params["down_proj"], h, policy)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    H = cfg.num_heads
+    dh = cfg.d_inner // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def mlstm_decode_step(params: Dict, x: jax.Array, state: Dict, cfg: ModelConfig,
+                      policy: Policy) -> Tuple[jax.Array, Dict]:
+    H = cfg.num_heads
+    up = layers.dense_apply(params["up_proj"], x, policy)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = _mlstm_heads(layers.dense_apply(params["wq"], xi, policy), H)[:, 0]
+    k = _mlstm_heads(layers.dense_apply(params["wk"], xi, policy), H)[:, 0]
+    v = _mlstm_heads(layers.dense_apply(params["wv"], xi, policy), H)[:, 0]
+    gates = layers.dense_apply(params["w_if"], xi, policy).astype(jnp.float32)[:, 0]
+    it, ft = jnp.split(gates, 2, axis=-1)
+    dh = q.shape[-1]
+    (C, n, m), h = _mlstm_step(
+        (state["C"], state["n"], state["m"]),
+        (q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+         it, ft), 1.0 / math.sqrt(dh))
+    h = h.reshape(x.shape[0], 1, -1).astype(x.dtype) * jax.nn.silu(z)
+    out = layers.dense_apply(params["down_proj"], h, policy)
+    return out, {"C": C, "n": n, "m": m}
+
+
+def slstm_init(key, cfg: ModelConfig) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.num_heads
+    dh = di // H
+    dt = cfg.param_jnp_dtype
+    ks = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(dh)
+    return {
+        "w_in": layers.dense_init(ks[0], d, 4 * di, dt),    # i, f, z, o pre-acts
+        # head-blocked recurrence (xLSTM block-diagonal R): (H, dh, 4*dh)
+        "r_blocks": jax.random.uniform(ks[1], (H, dh, 4 * dh), dt,
+                                       -scale, scale),
+        "down_proj": layers.dense_init(ks[2], di, d, dt),
+    }
+
+
+def _slstm_step(carry, wx, r_blocks):
+    """wx: (B, H, 4*dh) input pre-activations; carry h: (B, H, dh)."""
+    c, n, m, h_prev = carry
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, r_blocks)      # block-diagonal R
+    pre = wx + rec
+    i_r, f_r, z_r, o_r = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_r + m, i_r)
+    i_ = jnp.exp(i_r - m_new)
+    f_ = jnp.exp(f_r + m - m_new)
+    c = f_ * c + i_ * jnp.tanh(z_r)
+    n = f_ * n + i_
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h), h
+
+
+def slstm_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
+                policy: Policy) -> jax.Array:
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    di = cfg.d_inner
+    dh = di // H
+    wx = layers.dense_apply(params["w_in"], x, policy).astype(jnp.float32)
+    wx = wx.reshape(B, S, H, 4 * dh)
+    r = params["r_blocks"].astype(jnp.float32)
+
+    chunk = min(cfg.lstm_chunk, S)
+    if S % chunk:
+        chunk = S
+    nchunks = S // chunk
+
+    def chunk_fn(carry, xc):
+        carry, hs = jax.lax.scan(
+            lambda c, w: _slstm_step(c, w, r), carry, xc.swapaxes(0, 1))
+        return carry, hs.swapaxes(0, 1)
+
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    init = (z, z, jnp.zeros((B, H, dh), jnp.float32), z)
+    _, hs = _chunk_scan(chunk_fn, init,
+                        wx.reshape(B, nchunks, chunk, H, 4 * dh),
+                        nchunks, unroll=cfg.force_unroll, remat=cfg.remat)
+    h = hs.reshape(B, S, di).astype(x.dtype)
+    return layers.dense_apply(params["down_proj"], h, policy)
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    H = cfg.num_heads
+    dh = cfg.d_inner // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def slstm_decode_step(params: Dict, x: jax.Array, state: Dict, cfg: ModelConfig,
+                      policy: Policy) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    H = cfg.num_heads
+    dh = cfg.d_inner // H
+    wx = layers.dense_apply(params["w_in"], x, policy).astype(jnp.float32)
+    wx = wx.reshape(B, H, 4 * dh)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), _ = _slstm_step(carry, wx,
+                                  params["r_blocks"].astype(jnp.float32))
+    out = layers.dense_apply(params["down_proj"],
+                             h.reshape(B, 1, cfg.d_inner).astype(x.dtype),
+                             policy)
+    return out, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,359 @@
+"""Model assembly: pattern-based block stacks with scan-over-periods weight
+stacking (compact HLO for 80-layer models), decoder and encoder-decoder families,
+full-sequence forward (train/prefill) and single-token decode with typed caches.
+
+Layer topology = ``cfg.pattern`` repeated ``num_periods`` times (params stacked on
+a leading periods axis, mixed via lax.scan) plus an unrolled tail for depths not
+divisible by the period (e.g. gemma3's 34 = 6·5 + 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockCfg, ModelConfig
+from repro.core.policy import Policy
+from repro.models import attention, layers, moe, ssm
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, blk: BlockCfg, decoder: bool = True) -> Dict:
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_jnp_dtype
+    p: Dict[str, Any] = {"norm1": layers.rmsnorm_init(cfg.d_model, dt)}
+    if blk.mixer == "attn":
+        p["mixer"] = attention.attn_init(ks[0], cfg)
+    elif blk.mixer == "mamba":
+        p["mixer"] = ssm.mamba_init(ks[0], cfg)
+    elif blk.mixer == "mlstm":
+        p["mixer"] = ssm.mlstm_init(ks[0], cfg)
+    elif blk.mixer == "slstm":
+        p["mixer"] = ssm.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(blk.mixer)
+    if cfg.family == "encdec" and decoder:
+        p["norm_cross"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["cross"] = attention.attn_init(ks[1], cfg, cross=True)
+    if blk.mlp == "dense":
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["mlp"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dt,
+                                   act=cfg.mlp_act)
+    elif blk.mlp == "moe":
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["mlp"] = moe.moe_init(ks[2], cfg)
+    elif blk.mlp != "none":
+        raise ValueError(blk.mlp)
+    return p
+
+
+def block_apply(p: Dict, x: jax.Array, blk: BlockCfg, cfg: ModelConfig,
+                policy: Policy, sin, cos, enc_out=None,
+                causal: bool = True) -> Tuple[jax.Array, jax.Array]:
+    from repro.distributed.annotate import ann
+    aux = jnp.zeros((), jnp.float32)
+    x = ann(x, ("batch", None, None))
+    h = layers.rmsnorm_apply(p["norm1"], x)
+    if blk.mixer == "attn":
+        mo = attention.attn_apply(p["mixer"], h, cfg, policy, sin, cos,
+                                  window=blk.window, causal=causal)
+    elif blk.mixer == "mamba":
+        mo = ssm.mamba_apply(p["mixer"], h, cfg, policy)
+    elif blk.mixer == "mlstm":
+        mo = ssm.mlstm_apply(p["mixer"], h, cfg, policy)
+    else:
+        mo = ssm.slstm_apply(p["mixer"], h, cfg, policy)
+    x = x + mo
+    if enc_out is not None and "cross" in p:
+        hc = layers.rmsnorm_apply(p["norm_cross"], x)
+        x = x + attention.cross_attn_apply(p["cross"], hc, enc_out, cfg, policy)
+    if blk.mlp == "dense":
+        h2 = layers.rmsnorm_apply(p["norm2"], x)
+        x = x + layers.mlp_apply(p["mlp"], h2, policy, cfg.mlp_act)
+    elif blk.mlp == "moe":
+        h2 = layers.rmsnorm_apply(p["norm2"], x)
+        mo2, a = moe.moe_apply(p["mlp"], h2, cfg, policy)
+        x = x + mo2
+        aux = aux + a
+    return x, aux
+
+
+# --- decode ------------------------------------------------------------------
+
+def block_cache_init(cfg: ModelConfig, blk: BlockCfg, batch: int, seq_len: int,
+                     enc_seq: int = 0) -> Dict:
+    c: Dict[str, Any] = {}
+    if blk.mixer == "attn":
+        c["kv"] = attention.cache_init(cfg, batch, seq_len, blk.window)
+    elif blk.mixer == "mamba":
+        c["ssm"] = ssm.mamba_state_init(cfg, batch)
+    elif blk.mixer == "mlstm":
+        c["ssm"] = ssm.mlstm_state_init(cfg, batch)
+    elif blk.mixer == "slstm":
+        c["ssm"] = ssm.slstm_state_init(cfg, batch)
+    if cfg.family == "encdec" and enc_seq:
+        shape = (batch, enc_seq, cfg.num_kv_heads, cfg.head_dim)
+        c["cross_kv"] = {"k": jnp.zeros(shape, jnp.bfloat16),
+                         "v": jnp.zeros(shape, jnp.bfloat16)}
+    return c
+
+
+def block_decode_step(p: Dict, x: jax.Array, cache: Dict, blk: BlockCfg,
+                      cfg: ModelConfig, policy: Policy, pos, sin, cos
+                      ) -> Tuple[jax.Array, Dict]:
+    new_cache = dict(cache)
+    h = layers.rmsnorm_apply(p["norm1"], x)
+    if blk.mixer == "attn":
+        mo, kv = attention.attn_decode_step(p["mixer"], h, cache["kv"], pos, cfg,
+                                            policy, sin, cos, window=blk.window)
+        new_cache["kv"] = kv
+    elif blk.mixer == "mamba":
+        mo, st = ssm.mamba_decode_step(p["mixer"], h, cache["ssm"], cfg, policy)
+        new_cache["ssm"] = st
+    elif blk.mixer == "mlstm":
+        mo, st = ssm.mlstm_decode_step(p["mixer"], h, cache["ssm"], cfg, policy)
+        new_cache["ssm"] = st
+    else:
+        mo, st = ssm.slstm_decode_step(p["mixer"], h, cache["ssm"], cfg, policy)
+        new_cache["ssm"] = st
+    x = x + mo
+    if "cross_kv" in cache and "cross" in p:
+        hc = layers.rmsnorm_apply(p["norm_cross"], x)
+        ck = cache["cross_kv"]
+        q = attention._split_heads(
+            layers.dense_apply(p["cross"]["wq"], hc, policy),
+            cfg.num_heads, cfg.head_dim)
+        scores = attention._gqa_scores(q, ck["k"].astype(q.dtype), cfg)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        co = attention._gqa_out(probs, ck["v"].astype(x.dtype), cfg)
+        x = x + layers.dense_apply(p["cross"]["wo"], co, policy)
+    if blk.mlp == "dense":
+        h2 = layers.rmsnorm_apply(p["norm2"], x)
+        x = x + layers.mlp_apply(p["mlp"], h2, policy, cfg.mlp_act)
+    elif blk.mlp == "moe":
+        h2 = layers.rmsnorm_apply(p["norm2"], x)
+        mo2, _ = moe.moe_apply(p["mlp"], h2, cfg, policy)
+        x = x + mo2
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def policy(self) -> Policy:
+        return Policy(self.cfg.policy_name)
+
+    # --- init ---------------------------------------------------------------
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": layers.embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                       cfg.param_jnp_dtype),
+            "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.param_jnp_dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.dense_init(
+                keys[1], cfg.d_model, cfg.vocab_size, cfg.param_jnp_dtype)
+
+        def init_period(k):
+            ks = jax.random.split(k, cfg.period)
+            return {f"b{j}": block_init(ks[j], cfg, blk)
+                    for j, blk in enumerate(cfg.pattern)}
+
+        if cfg.num_periods > 0:
+            pkeys = jax.random.split(keys[2], cfg.num_periods)
+            params["stack"] = jax.vmap(init_period)(pkeys)
+        for j, blk in enumerate(cfg.tail_blocks):
+            params[f"tail{j}"] = block_init(jax.random.fold_in(keys[3], j),
+                                            cfg, blk)
+        if cfg.family == "encdec":
+            ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+            eblk = BlockCfg(mixer="attn", mlp="dense")
+            params["encoder"] = jax.vmap(
+                lambda k: block_init(k, cfg, eblk, decoder=False))(ekeys)
+            params["enc_norm"] = layers.rmsnorm_init(cfg.d_model,
+                                                     cfg.param_jnp_dtype)
+            params["enc_pos"] = jax.random.normal(
+                keys[5], (cfg.encoder_seq, cfg.d_model),
+                cfg.param_jnp_dtype) * 0.02
+        return params
+
+    # --- shared pieces --------------------------------------------------------
+
+    def _rope(self, positions, batch: Optional[int] = None):
+        cfg = self.cfg
+        if cfg.rope_type == "none":
+            s = positions.shape[-1] if positions.ndim else 1
+            z = jnp.zeros((s, cfg.head_dim // 2), jnp.float32)
+            return z, 1.0 + z
+        if cfg.rope_type == "mrope":
+            if positions.ndim == 1:  # text-only: all three streams identical
+                positions = jnp.broadcast_to(positions[None, None, :],
+                                             (batch or 1, 3, positions.shape[0]))
+            return layers.mrope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                                       cfg.mrope_sections)
+        return layers.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    def _encode(self, params: Dict, enc_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        policy = self.policy
+        x = enc_embeds.astype(cfg.compute_jnp_dtype)
+        x = x + params["enc_pos"].astype(x.dtype)[None, :x.shape[1]]
+        sin, cos = self._rope(jnp.arange(x.shape[1]))
+        eblk = BlockCfg(mixer="attn", mlp="dense")
+
+        def enc_layer(x, p):
+            y, _ = block_apply(p, x, eblk, cfg, policy, sin, cos, causal=False)
+            return y
+
+        if cfg.remat:
+            enc_layer = jax.checkpoint(enc_layer)
+
+        if cfg.force_unroll:
+            for i in range(cfg.encoder_layers):
+                x = enc_layer(x, jax.tree.map(lambda t: t[i], params["encoder"]))
+        else:
+            x, _ = jax.lax.scan(lambda c, p: (enc_layer(c, p), None), x,
+                                params["encoder"])
+        return layers.rmsnorm_apply(params["enc_norm"], x)
+
+    # --- forward (train / prefill) --------------------------------------------
+
+    def apply(self, params: Dict, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        """batch: {"tokens" (B,S) int32 | "embeds" (B,S,d)} [+ "enc_embeds",
+        "positions"]; returns (logits f32 (B,S,V), aux_loss)."""
+        cfg = self.cfg
+        policy = self.policy
+        if "embeds" in batch:
+            x = batch["embeds"].astype(cfg.compute_jnp_dtype)
+        else:
+            x = layers.embed_apply(params["embed"], batch["tokens"],
+                                   cfg.compute_jnp_dtype)
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        B, S = x.shape[:2]
+        positions = batch.get("positions", jnp.arange(S))
+        sin, cos = self._rope(positions, batch=B)
+        enc_out = (self._encode(params, batch["enc_embeds"])
+                   if cfg.family == "encdec" else None)
+
+        aux = jnp.zeros((), jnp.float32)
+
+        def period_fn(x, aux, pp):
+            for j, blk in enumerate(cfg.pattern):
+                x, a = block_apply(pp[f"b{j}"], x, blk, cfg, policy, sin, cos,
+                                   enc_out=enc_out)
+                aux = aux + a
+            return x, aux
+
+        if cfg.remat:
+            period_fn = jax.checkpoint(period_fn)
+
+        def period_body(carry, pp):
+            x, aux = carry
+            x, aux = period_fn(x, aux, pp)
+            return (x, aux), None
+
+        if cfg.num_periods > 0:
+            if cfg.force_unroll:
+                for i in range(cfg.num_periods):
+                    pp = jax.tree.map(lambda t: t[i], params["stack"])
+                    x, aux = period_fn(x, aux, pp)
+            else:
+                (x, aux), _ = jax.lax.scan(period_body, (x, aux),
+                                           params["stack"])
+        for j, blk in enumerate(cfg.tail_blocks):
+            x, a = block_apply(params[f"tail{j}"], x, blk, cfg, policy, sin, cos,
+                               enc_out=enc_out)
+            aux = aux + a
+
+        from repro.distributed.annotate import ann
+        x = layers.rmsnorm_apply(params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = layers.unembed_apply(params["embed"], x, policy)
+        else:
+            logits = ann(layers.dense_apply(params["lm_head"], x,
+                                            policy).astype(jnp.float32),
+                         ("batch", None, "vocab"))
+        logits = layers.softcap(logits, cfg.logit_softcap)
+        return logits, aux
+
+    # --- decode ----------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        cfg = self.cfg
+        cache: Dict[str, Any] = {}
+
+        def one_period(_):
+            return {f"b{j}": block_cache_init(cfg, blk, batch, seq_len,
+                                              enc_seq=cfg.encoder_seq)
+                    for j, blk in enumerate(cfg.pattern)}
+
+        if cfg.num_periods > 0:
+            cache["stack"] = jax.vmap(one_period)(jnp.arange(cfg.num_periods))
+        for j, blk in enumerate(cfg.tail_blocks):
+            cache[f"tail{j}"] = block_cache_init(cfg, blk, batch, seq_len,
+                                                 enc_seq=cfg.encoder_seq)
+        return cache
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Dict]:
+        """tokens (B, 1) int32; pos scalar int32.  Returns (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        policy = self.policy
+        x = layers.embed_apply(params["embed"], tokens, cfg.compute_jnp_dtype)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        B = x.shape[0]
+        positions = jnp.full((1,), pos, jnp.int32)
+        sin, cos = self._rope(positions, batch=B)
+
+        new_cache: Dict[str, Any] = {}
+
+        def period_body(x, xs):
+            pp, cc = xs
+            ncc = {}
+            for j, blk in enumerate(cfg.pattern):
+                x, nc = block_decode_step(pp[f"b{j}"], x, cc[f"b{j}"], blk, cfg,
+                                          policy, pos, sin, cos)
+                ncc[f"b{j}"] = nc
+            return x, ncc
+
+        if cfg.num_periods > 0:
+            if cfg.force_unroll:
+                nccs = []
+                for i in range(cfg.num_periods):
+                    pp = jax.tree.map(lambda t: t[i], params["stack"])
+                    cc = jax.tree.map(lambda t: t[i], cache["stack"])
+                    x, ncc = period_body(x, (pp, cc))
+                    nccs.append(ncc)
+                new_cache["stack"] = jax.tree.map(
+                    lambda *ts: jnp.stack(ts), *nccs)
+            else:
+                x, new_cache["stack"] = jax.lax.scan(
+                    period_body, x, (params["stack"], cache["stack"]))
+        for j, blk in enumerate(cfg.tail_blocks):
+            x, nc = block_decode_step(params[f"tail{j}"], x, cache[f"tail{j}"],
+                                      blk, cfg, policy, pos, sin, cos)
+            new_cache[f"tail{j}"] = nc
+
+        x = layers.rmsnorm_apply(params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = layers.unembed_apply(params["embed"], x, policy)
+        else:
+            logits = layers.dense_apply(params["lm_head"], x,
+                                        policy).astype(jnp.float32)
+        return layers.softcap(logits, cfg.logit_softcap), new_cache

@@ -1,0 +1,18 @@
+"""Learning-rate schedules (jax.lax-friendly: step -> scale multipliers)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, warmup_steps: int, total_steps: int,
+                         min_ratio: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def constant(step):
+    return 1.0

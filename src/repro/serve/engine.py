@@ -1,0 +1,119 @@
+"""Serving engine: prefill + decode with continuous batching.
+
+``ServeEngine`` wraps a Model with:
+  * ``prefill``  — full-sequence forward that also populates the KV/state cache
+    (teacher-forced pass over the prompt, cache written via decode steps in
+    chunks for state mixers);
+  * ``decode``   — batched single-token steps (the shape lowered by decode
+    cells in the dry-run);
+  * ``ContinuousBatcher`` — slot-based request scheduler: finished sequences
+    release their cache slot to queued requests between steps (the vLLM-style
+    loop, with per-slot position counters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray             # (P,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Pytree, batch_slots: int,
+                 max_seq: int):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(batch_slots, max_seq)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(model.decode_step)
+
+    def prefill_slot(self, slot: int, prompt: np.ndarray) -> int:
+        """Feed a prompt through decode steps to fill the cache slot.
+
+        Single-slot prefill via the decode path keeps cache semantics identical
+        for every mixer kind (attention ring buffers and SSM states alike).
+        """
+        last = 0
+        for t, tok in enumerate(prompt):
+            tokens = np.zeros((self.slots, 1), np.int32)
+            tokens[slot, 0] = tok
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(t, jnp.int32))
+            last = int(jnp.argmax(logits[slot, 0]))
+        self.pos[slot] = len(prompt)
+        return last
+
+    def decode_step_all(self, tokens: np.ndarray, pos: int) -> np.ndarray:
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens.reshape(-1, 1)),
+            jnp.asarray(pos, jnp.int32))
+        return np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+
+
+@dataclasses.dataclass
+class ContinuousBatcher:
+    """Slot scheduler: admits queued requests into freed slots each step."""
+    engine: ServeEngine
+    queue: List[Request] = dataclasses.field(default_factory=list)
+    active: Dict[int, Request] = dataclasses.field(default_factory=dict)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.engine.slots):
+            if slot not in self.active and self.queue:
+                req = self.queue.pop(0)
+                first = self.engine.prefill_slot(slot, req.prompt)
+                req.generated.append(first)
+                self.active[slot] = req
+
+    def step(self) -> List[Request]:
+        """One engine step; returns requests that finished this step."""
+        self._admit()
+        if not self.active:
+            return []
+        tokens = np.zeros(self.engine.slots, np.int32)
+        pos = 0
+        for slot, req in self.active.items():
+            tokens[slot] = req.generated[-1]
+            pos = max(pos, int(self.engine.pos[slot]))
+        nxt = self.engine.decode_step_all(tokens, pos)
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.generated.append(int(nxt[slot]))
+            self.engine.pos[slot] += 1
+            if req.done:
+                finished.append(req)
+                del self.active[slot]      # slot released -> next admit() reuses
+        return finished
+
+    def run_to_completion(self, max_steps: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                break
+            done.extend(self.step())
+        return done

@@ -1,0 +1,137 @@
+"""Fault tolerance for multi-pod training: heartbeats, straggler detection,
+restart policy.  Designed for 1000+ nodes; exercised here with simulated hosts.
+
+Components:
+  * HeartbeatMonitor — per-host liveness with configurable timeout; a host that
+    misses ``timeout_s`` is declared dead and a re-mesh is requested.
+  * StragglerDetector — per-step wall-time EWMA + z-score across hosts; hosts
+    slower than ``z_thresh`` sigma for ``patience`` consecutive steps are flagged
+    for eviction (the TPU equivalent of SLURM drain + elastic re-mesh).
+  * RestartPolicy — exponential-backoff restart budget; integrates with
+    checkpoint.latest_step for resume-from-latest.
+  * run_with_recovery — the driver loop: wraps a step function, checkpoints
+    periodically, and on (simulated or real) failure restores the latest
+    complete checkpoint and continues.  This is the single-process analogue of
+    the k8s/GKE "jobset restart" pattern; the checkpoint/restore machinery is
+    identical in the real deployment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.train import checkpoint
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    num_hosts: int
+    timeout_s: float = 60.0
+    _last: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, host_id: int, now: Optional[float] = None) -> None:
+        self._last[host_id] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h in range(self.num_hosts)
+                if now - self._last.get(h, -1e18) > self.timeout_s]
+
+    @property
+    def healthy(self) -> bool:
+        return not self.dead_hosts()
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    num_hosts: int
+    alpha: float = 0.1            # EWMA smoothing
+    z_thresh: float = 3.0
+    patience: int = 5
+    _ewma: Optional[np.ndarray] = None
+    _flags: Optional[np.ndarray] = None
+
+    def observe(self, step_times: np.ndarray) -> List[int]:
+        """step_times: (num_hosts,) wall seconds for this step.
+        Returns hosts flagged as stragglers (>= patience consecutive hits)."""
+        if self._ewma is None:
+            self._ewma = step_times.astype(np.float64).copy()
+            self._flags = np.zeros(self.num_hosts, np.int32)
+            return []
+        self._ewma = (1 - self.alpha) * self._ewma + self.alpha * step_times
+        # robust z-score (median/MAD) so the straggler can't inflate the spread
+        med = np.median(self._ewma)
+        mad = np.median(np.abs(self._ewma - med)) * 1.4826 + 1e-6 * med + 1e-12
+        z = (self._ewma - med) / mad
+        hit = z > self.z_thresh
+        self._flags = np.where(hit, self._flags + 1, 0)
+        return [int(h) for h in np.nonzero(self._flags >= self.patience)[0]]
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 10
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+    restarts: int = 0
+
+    def next_delay(self) -> Optional[float]:
+        if self.restarts >= self.max_restarts:
+            return None
+        d = self.backoff_s * (self.backoff_mult ** self.restarts)
+        self.restarts += 1
+        return d
+
+
+class StepFailure(RuntimeError):
+    """Raised by a step function to signal a recoverable worker failure."""
+
+
+def run_with_recovery(step_fn: Callable[[int, Any], Tuple[Any, Dict]],
+                      init_state: Any, num_steps: int, ckpt_dir: str,
+                      ckpt_every: int = 10,
+                      policy: Optional[RestartPolicy] = None,
+                      sleep: Callable[[float], None] = time.sleep
+                      ) -> Tuple[Any, Dict]:
+    """Run ``state, metrics = step_fn(step, state)`` for num_steps with
+    checkpoint/restart recovery.  Returns (final_state, stats)."""
+    policy = policy or RestartPolicy()
+    writer = checkpoint.AsyncWriter()
+    stats = {"failures": 0, "restores": 0, "steps_run": 0}
+
+    state = init_state
+    step = 0
+    start = checkpoint.latest_step(ckpt_dir)
+    if start is not None:
+        state, extra = checkpoint.restore(ckpt_dir, like=init_state)
+        step = int(extra.get("next_step", start + 1))
+        stats["restores"] += 1
+
+    while step < num_steps:
+        try:
+            state, _ = step_fn(step, state)
+            stats["steps_run"] += 1
+            step += 1
+            if step % ckpt_every == 0 or step == num_steps:
+                writer.save(ckpt_dir, step, state, extra={"next_step": step})
+        except StepFailure:
+            stats["failures"] += 1
+            delay = policy.next_delay()
+            if delay is None:
+                writer.wait()
+                raise
+            sleep(delay)
+            writer.wait()
+            last = checkpoint.latest_step(ckpt_dir)
+            if last is not None:
+                state, extra = checkpoint.restore(ckpt_dir, like=init_state)
+                step = int(extra.get("next_step", last))
+                stats["restores"] += 1
+            else:
+                state, step = init_state, 0
+    writer.wait()
+    return state, stats

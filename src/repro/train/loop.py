@@ -1,0 +1,139 @@
+"""Training step & loop: loss, gradients, clipping, AdamW, optional gradient
+compression, microbatch accumulation — all jax.lax control flow, pjit-compatible.
+
+``make_train_step(model)`` returns the pure function lowered by the dry-run:
+(params, opt_state, batch) -> (params, opt_state, metrics).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.optim import adamw
+from repro.optim.schedules import linear_warmup_cosine
+
+Pytree = Any
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       z_loss: float = 1e-4) -> jax.Array:
+    """Next-token CE (logits f32 (B,S,V), labels (B,S)) with z-loss.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis: under a vocab-sharded logits layout the contraction stays
+    local + a tiny all-reduce, where a gather would force GSPMD to all-gather
+    the full logits (16 GB/device at 64k vocab).
+    """
+    from repro.distributed.annotate import ann
+    shift_logits = logits[:, :-1]
+    shift_labels = labels[:, 1:]
+    logz = jax.nn.logsumexp(shift_logits, axis=-1)
+    onehot = ann(jax.nn.one_hot(shift_labels, logits.shape[-1],
+                                dtype=shift_logits.dtype),
+                 ("batch", None, "vocab"))
+    gold = jnp.einsum("bsv,bsv->bs", shift_logits, onehot)
+    ce = jnp.mean(logz - gold)
+    return ce + z_loss * jnp.mean(logz ** 2)
+
+
+def make_loss_fn(model: Model, aux_weight: float = 0.01) -> Callable:
+    def loss_fn(params: Pytree, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, aux = model.apply(params, batch)
+        ce = cross_entropy_loss(logits, batch["labels"])
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model: Model,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    warmup_steps: int = 100, total_steps: int = 10_000,
+                    compress_grads: bool = False,
+                    microbatch: int = 1, unroll: bool = False) -> Callable:
+    """Build the train_step.  ``microbatch`` > 1 accumulates gradients over
+    sequential microbatches — the standard memory/throughput trade.  Batches
+    are split *strided* ((B//mb, mb) -> swap) so each device keeps its own rows
+    and no resharding collective is introduced.  ``compress_grads`` routes
+    gradients through the int8 error-feedback compressor.  ``unroll`` uses a
+    python loop for the accumulation (exact dry-run cost accounting)."""
+    loss_fn = make_loss_fn(model)
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, metrics, grads
+
+    def train_step(params: Pytree, opt_state: Dict, batch: Dict,
+                   compress_state: Optional[Pytree] = None):
+        if microbatch > 1:
+            from repro.distributed.annotate import ann
+
+            def split(x):
+                y = x.reshape((-1, microbatch) + x.shape[1:]).swapaxes(0, 1)
+                return y
+
+            mbatches = jax.tree.map(split, batch)
+
+            def one(mb):
+                mb = {k: ann(v, ("batch",) + (None,) * (v.ndim - 1))
+                      for k, v in mb.items()}
+                return single_grads(params, mb)
+
+            if unroll:
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params)
+                gsum, losses = zero, []
+                for i in range(microbatch):
+                    mb = jax.tree.map(lambda t: t[i], mbatches)
+                    loss, _, grads = one(mb)
+                    gsum = jax.tree.map(jnp.add, gsum, grads)
+                    losses.append(loss)
+                grads = jax.tree.map(lambda g: g / microbatch, gsum)
+                loss = jnp.mean(jnp.stack(losses))
+            else:
+                def body(acc, mb):
+                    loss, _, grads = one(mb)
+                    return jax.tree.map(jnp.add, acc, grads), loss
+
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params)
+                gsum, losses = jax.lax.scan(body, zero, mbatches)
+                grads = jax.tree.map(lambda g: g / microbatch, gsum)
+                loss = jnp.mean(losses)
+            metrics = {}
+        else:
+            loss, metrics, grads = single_grads(params, batch)
+
+        if compress_grads:
+            from repro.distributed import compression
+            grads, compress_state = compression.compress_decompress(
+                grads, compress_state)
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, opt_cfg.grad_clip_norm)
+        lr_scale = linear_warmup_cosine(opt_state["step"] + 1, warmup_steps,
+                                        total_steps)
+        params, opt_state = adamw.adamw_update(params, grads, opt_state,
+                                               opt_cfg, lr_scale)
+        out_metrics = {"loss": loss, "grad_norm": gnorm,
+                       "lr_scale": jnp.asarray(lr_scale, jnp.float32)}
+        out_metrics.update({k: v for k, v in metrics.items()})
+        if compress_grads:
+            return params, opt_state, out_metrics, compress_state
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,11 @@
+"""Test configuration.
+
+x64 is enabled because the Ozaki emulation targets FP64-equivalent accuracy and the
+tests compare against true float64 oracles (this is a CPU container; TPU is the
+compile target).  Device count stays at 1 — only launch/dryrun.py (run as a script)
+forces the 512-device host platform.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

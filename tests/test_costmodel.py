@@ -1,0 +1,114 @@
+"""Tests for the roofline tooling: jaxpr cost model + HLO collective parser."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import cost_model, roofline
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    stats = cost_model.count(f, a, b)
+    assert stats["flops"] == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+    # traffic model: lhs + rhs + out bytes
+    assert stats["hbm_bytes"] == (64 * 128 + 128 * 32 + 64 * 32) * 4
+
+
+def test_scan_multiplies_by_length():
+    """The whole point: XLA costs a scan body once; the jaxpr counter doesn't."""
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def f(w, x):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    stats = cost_model.count(f, w, x)
+    assert stats["flops"] == pytest.approx(10 * 2 * 4 * 16 * 16, rel=0.05)
+
+
+def test_nested_scan():
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci * 2.0, None
+            ci, _ = jax.lax.scan(inner, c, None, length=5)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((8,), jnp.float32)
+    stats = cost_model.count(f, x)
+    assert stats["flops"] == pytest.approx(3 * 5 * 8, rel=0.01)
+
+
+def test_grad_includes_backward():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    fwd = cost_model.count(loss, w, x)["flops"]
+    bwd = cost_model.count(jax.grad(loss, (0, 1)), w, x)["flops"]
+    assert bwd > 2.5 * fwd  # fwd + dgrad + wgrad
+
+
+def test_scan_state_bytes():
+    def f(x):
+        def body(c, _):
+            return c * 1.5, c
+        y, ys = jax.lax.scan(body, x, None, length=7)
+        return y, ys
+
+    x = jax.ShapeDtypeStruct((100,), jnp.float32)
+    stats = cost_model.count(f, x)
+    # 7 * (2 * carry 400B + ys slice 400B)
+    assert stats["scan_state_bytes"] == 7 * (2 * 400 + 400)
+
+
+def test_collective_parser():
+    hlo = """
+      %ag = bf16[8,1024]{1,0} all-gather(bf16[8,64]{1,0} %x), dims={1}
+      %ar = f32[16,16]{1,0} all-reduce(f32[16,16]{1,0} %y), to_apply=%sum
+      %rs = f32[4,8]{1,0} reduce-scatter(f32[4,64]{1,0} %z), dims={1}
+      %t = (f32[8]{0}, f32[8]{0}) all-reduce(f32[8]{0} %a, f32[8]{0} %b)
+      %p = u8[128]{0} collective-permute(u8[128]{0} %w), pairs={{0,1}}
+      %st = f32[2]{0} all-gather-start(f32[1]{0} %q)
+      %dn = f32[2]{0} all-gather-done(f32[2]{0} %st)
+    """
+    total, by_kind = roofline.collective_bytes_from_hlo(hlo)
+    assert by_kind["all-gather"] == 8 * 1024 * 2 + 2 * 4
+    assert by_kind["all-reduce"] == 2 * (16 * 16 * 4) + 2 * (2 * 8 * 4)
+    assert by_kind["reduce-scatter"] == 4 * 8 * 4
+    assert by_kind["collective-permute"] == 128
+    assert total == sum(by_kind.values())
+
+
+def test_model_flops_for():
+    from repro.configs import registry
+    from repro.configs.base import SHAPES_BY_NAME
+    cfg = registry.get_config("yi-6b")
+    n = cfg.active_param_count()
+    train = roofline.model_flops_for(cfg, SHAPES_BY_NAME["train_4k"])
+    assert train == pytest.approx(6 * n * 4096 * 256)
+    dec = roofline.model_flops_for(cfg, SHAPES_BY_NAME["decode_32k"])
+    assert dec == pytest.approx(2 * n * 128)
+
+
+def test_cell_report_dominant():
+    rep = roofline.CellReport(
+        arch="x", shape="y", mesh="16x16", chips=256,
+        hlo_flops=1e15, hlo_bytes=1e15, collective_bytes=1e12,
+        collective_by_kind={}, per_device_peak_bytes=None,
+        model_flops=8e14).finish()
+    assert rep.dominant == "memory"          # bytes/819GB >> flops/197T
+    assert 0 < rep.roofline_fraction < 1
+    assert rep.useful_ratio == pytest.approx(0.8)

@@ -1,0 +1,174 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles.
+
+Every fused Pallas kernel (interpret=True on this CPU container; Mosaic on TPU) is
+checked two ways:
+  1. accuracy vs the float64 oracle (§2.5 error band),
+  2. BIT-EXACT equality of the f64 output mode against the unfused XLA
+     implementation (repro.core.ozaki2) — this pins every integer step.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ozaki2
+from repro.kernels import ops, ref
+
+U64 = 2.0 ** -53
+RNG = np.random.default_rng(123)
+
+
+def _gemm_err(c, a, b):
+    denom = np.abs(np.asarray(a)) @ np.abs(np.asarray(b)) + 1e-300
+    return np.max(np.abs(np.asarray(c) - np.asarray(ref.gemm_f64(a, b))) / denom)
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn,blocks", [
+    ((16, 32, 16), (16, 16, 32)),
+    ((40, 70, 24), (16, 8, 32)),       # ragged: padding path
+    ((128, 256, 64), (64, 32, 128)),   # multi-step K accumulation
+    ((8, 8, 8), (8, 8, 8)),            # single block
+])
+@pytest.mark.parametrize("out_rep", ["f64", "digits"])
+def test_gemm_accuracy_sweep(mkn, blocks, out_rep):
+    m, k, n = mkn
+    bm, bn, bk = blocks
+    a = jnp.asarray(RNG.standard_normal((m, k)))
+    b = jnp.asarray(RNG.standard_normal((k, n)))
+    c = ops.ozaki_gemm(a, b, out_rep=out_rep, bm=bm, bn=bn, bk=bk)
+    assert _gemm_err(c, a, b) <= 16 * U64
+
+
+def test_gemm_ds_mode_precision():
+    a = jnp.asarray(RNG.standard_normal((32, 64)))
+    b = jnp.asarray(RNG.standard_normal((64, 32)))
+    c = ops.ozaki_gemm(a, b, out_rep="ds", bm=16, bn=16, bk=32)
+    err = _gemm_err(c, a, b)
+    assert err <= 2.0 ** -44  # double-single carries ~45-48 bits
+    assert err > 2.0 ** -60   # ...but is not full f64 (sanity on the mode split)
+
+
+def test_gemm_kernel_bitexact_vs_xla_ozaki2():
+    a = jnp.asarray(RNG.standard_normal((24, 48)))
+    b = jnp.asarray(RNG.standard_normal((48, 16)))
+    plan = ozaki2.make_plan(48)
+    c_kernel = ops.ozaki_gemm(a, b, plan=plan, out_rep="f64", bm=8, bn=8, bk=16)
+    c_xla = ozaki2.emulated_matmul(a, b, plan)
+    np.testing.assert_array_equal(np.asarray(c_kernel), np.asarray(c_xla))
+
+
+def test_gemm_f32_inputs():
+    a = jnp.asarray(RNG.standard_normal((16, 32)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    plan = ozaki2.make_plan(32, payload_bits=24)
+    c = ops.ozaki_gemm(a, b, plan=plan, bm=16, bn=16, bk=32)
+    want = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    denom = np.abs(np.asarray(a, np.float64)) @ np.abs(np.asarray(b, np.float64))
+    assert np.max(np.abs(np.asarray(c) - want) / denom) <= 2.0 ** -22
+
+
+# ---------------------------------------------------------------------------
+# Batched GEMV (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mnb", [(64, 96, 8), (33, 70, 2), (128, 64, 4)])
+@pytest.mark.parametrize("out_rep", ["f64", "digits"])
+def test_gemv_accuracy_sweep(mnb, out_rep):
+    m, n, bsz = mnb
+    a = jnp.asarray(RNG.standard_normal((m, n)))
+    x = jnp.asarray(RNG.standard_normal((n, bsz)))
+    y = ops.ozaki_gemv(a, x, out_rep=out_rep, bm=16, bk=32)
+    denom = np.abs(np.asarray(a)) @ np.abs(np.asarray(x)) + 1e-300
+    err = np.max(np.abs(np.asarray(y) - np.asarray(ref.gemv_f64(a, x))) / denom)
+    assert err <= 16 * U64
+
+
+def test_gemv_matches_gemm_kernel():
+    a = jnp.asarray(RNG.standard_normal((32, 64)))
+    x = jnp.asarray(RNG.standard_normal((64, 8)))
+    plan = ozaki2.make_plan(64)
+    y1 = ops.ozaki_gemv(a, x, plan=plan, bm=16, bk=32)
+    y2 = ops.ozaki_gemm(a, x, plan=plan, bm=16, bn=8, bk=32)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+# ---------------------------------------------------------------------------
+# 7-point stencil (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,bz", [
+    ((12, 10, 20), 4),
+    ((8, 8, 8), 8),      # single slab
+    ((6, 7, 13), 4),     # ragged z: padding path
+])
+@pytest.mark.parametrize("out_rep", ["f64", "digits"])
+def test_stencil_accuracy_sweep(shape, bz, out_rep):
+    u = jnp.asarray(RNG.standard_normal(shape))
+    c = jnp.asarray(np.array([6.0, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0]))
+    v = ops.ozaki_stencil7(u, c, out_rep=out_rep, bz=bz)
+    want = np.asarray(ref.stencil7_f64(u, c))
+    scale = 7 * np.max(np.abs(np.asarray(u))) * np.max(np.abs(np.asarray(c)))
+    assert np.max(np.abs(np.asarray(v) - want)) <= 8 * U64 * scale
+    assert v.shape == shape
+
+
+def test_stencil_boundary_zero_halo():
+    """Points on the global boundary must see a zero halo, not wraparound."""
+    u = jnp.asarray(np.ones((4, 4, 8)))
+    c = jnp.asarray(np.array([0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0]))  # pure -z shift
+    v = np.asarray(ops.ozaki_stencil7(u, c, bz=4))
+    assert np.all(v[:, :, 0] == 0.0)   # first plane has no -z neighbour
+    assert np.all(v[:, :, 1:] == 1.0)
+
+
+def test_stencil_anisotropic_coeffs():
+    u = jnp.asarray(RNG.standard_normal((8, 8, 8)))
+    c = jnp.asarray(RNG.standard_normal(7))
+    v = np.asarray(ops.ozaki_stencil7(u, c, bz=4))
+    want = np.asarray(ref.stencil7_f64(u, c))
+    scale = float(7 * jnp.max(jnp.abs(u)) * jnp.max(jnp.abs(c)))
+    assert np.max(np.abs(v - want)) <= 8 * U64 * scale
+
+
+# ---------------------------------------------------------------------------
+# Blocked-ELL SpMV (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def _random_bell(m, n, bw, zero_frac=0.2):
+    col = RNG.integers(0, n, (m, bw)).astype(np.int32)
+    val = RNG.standard_normal((m, bw))
+    val[RNG.random((m, bw)) < zero_frac] = 0.0  # structural zeros (padding)
+    return jnp.asarray(val), jnp.asarray(col), jnp.asarray(RNG.standard_normal(n))
+
+
+@pytest.mark.parametrize("mnbw", [(50, 64, 8), (128, 32, 16), (17, 100, 4)])
+@pytest.mark.parametrize("out_rep", ["f64", "digits"])
+def test_spmv_accuracy_sweep(mnbw, out_rep):
+    m, n, bw = mnbw
+    val, col, x = _random_bell(m, n, bw)
+    y = ops.ozaki_spmv_bell(val, col, x, out_rep=out_rep, br=16)
+    want = np.asarray(ref.spmv_bell_f64(val, col, x))
+    denom = (np.abs(np.asarray(val)).sum(-1) * np.max(np.abs(np.asarray(x)))
+             + 1e-300)
+    assert np.max(np.abs(np.asarray(y) - want) / denom) <= 16 * U64
+
+
+def test_spmv_laplacian_1d():
+    """A real PDE matrix: 1-D Laplacian in ELL form, y = A x exact vs dense."""
+    n = 96
+    dense = (np.diag(2.0 * np.ones(n)) - np.diag(np.ones(n - 1), 1)
+             - np.diag(np.ones(n - 1), -1))
+    col = np.zeros((n, 4), np.int32)
+    val = np.zeros((n, 4))
+    for i in range(n):
+        nz = [(j, dense[i, j]) for j in range(n) if dense[i, j] != 0]
+        for s, (j, v) in enumerate(nz):
+            col[i, s], val[i, s] = j, v
+    x = RNG.standard_normal(n)
+    y = np.asarray(ops.ozaki_spmv_bell(jnp.asarray(val), jnp.asarray(col),
+                                       jnp.asarray(x), br=32))
+    np.testing.assert_allclose(y, dense @ x, rtol=0, atol=4 * U64 * 4 * np.abs(x).max())

@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests (assignment requirement f).
+
+Each assigned architecture instantiates its REDUCED config and runs one forward /
+train step on CPU, asserting output shapes and no NaNs.  Representative archs also
+get a decode-vs-forward consistency check (the cache correctness oracle: decoding
+token-by-token must reproduce the teacher-forced forward logits).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES_BY_NAME
+from repro.models.transformer import Model
+
+ARCHS = registry.list_archs()
+TRAIN = SHAPES_BY_NAME["train_4k"]
+
+
+def _setup(arch, **overrides):
+    cfg = registry.get_config(arch, smoke=True, **overrides)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params = _setup(arch)
+    batch = registry.concrete_batch(cfg, TRAIN, batch=2, seq=16)
+    logits, aux = model.apply(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    from repro.train.loop import make_train_step
+    from repro.optim.adamw import adamw_init
+
+    cfg, model, params = _setup(arch)
+    opt_state = adamw_init(params)
+    step_fn = make_train_step(model)
+    batch = registry.concrete_batch(cfg, TRAIN, batch=2, seq=16)
+    params2, opt_state2, metrics = step_fn(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, params2)
+    assert any(jax.tree.leaves(moved))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch):
+    cfg, model, params = _setup(arch)
+    cache = model.init_cache(batch=2, seq_len=24)
+    logits, cache2 = model.decode_step(
+        params, cache, jnp.zeros((2, 1), jnp.int32), jnp.asarray(3, jnp.int32))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "gemma3-4b", "jamba-1.5-large-398b",
+                                  "xlstm-350m", "deepseek-moe-16b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the teacher-forced forward logits.
+
+    MoE archs use a no-drop capacity factor here: capacity-based token dropping
+    is a train-time batch effect that single-token decode (correctly) never
+    reproduces — the standard train/serve MoE divergence.
+    """
+    over = {}
+    base = registry.get_config(arch, smoke=True)
+    if base.moe is not None:
+        over["moe"] = dataclasses.replace(base.moe, capacity_factor=16.0)
+    cfg, model, params = _setup(arch, compute_dtype="float32", **over)
+    if cfg.frontend == "vision":
+        pytest.skip("decode over stub embeds not defined")
+    S = 12
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S)), jnp.int32)
+    full_logits, _ = model.apply(params, {"tokens": tokens})
+
+    cache = model.init_cache(batch=2, seq_len=S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                      jnp.asarray(t, jnp.int32))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_masks_differ_from_global():
+    """gemma3 local layers must not see past the window."""
+    cfg, model, params = _setup("gemma3-4b", compute_dtype="float32")
+    rng = np.random.default_rng(1)
+    S = 24
+    t1 = rng.integers(0, cfg.vocab_size, (1, S))
+    t2 = t1.copy()
+    t2[0, 0] = (t2[0, 0] + 7) % cfg.vocab_size  # perturb a distant-past token
+    l1, _ = model.apply(params, {"tokens": jnp.asarray(t1, jnp.int32)})
+    l2, _ = model.apply(params, {"tokens": jnp.asarray(t2, jnp.int32)})
+    # late positions still differ (global layers see everything)...
+    assert float(jnp.max(jnp.abs(l1[0, -1] - l2[0, -1]))) > 0
+    # ...but causality holds: positions before the perturbation are identical
+    np.testing.assert_array_equal(np.asarray(l1[0, :0]), np.asarray(l2[0, :0]))
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "jamba-1.5-large-398b", "xlstm-350m"])
+def test_causality(arch):
+    """Changing token t must not affect logits at positions < t."""
+    cfg, model, params = _setup(arch, compute_dtype="float32")
+    rng = np.random.default_rng(2)
+    S = 10
+    t1 = rng.integers(0, cfg.vocab_size, (1, S))
+    t2 = t1.copy()
+    t2[0, 6] = (t2[0, 6] + 3) % cfg.vocab_size
+    l1, _ = model.apply(params, {"tokens": jnp.asarray(t1, jnp.int32)})
+    l2, _ = model.apply(params, {"tokens": jnp.asarray(t2, jnp.int32)})
+    np.testing.assert_allclose(np.asarray(l1[0, :6]), np.asarray(l2[0, :6]),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(l1[0, 6:] - l2[0, 6:]))) > 0
+
+
+def test_moe_router_balanced_dispatch():
+    """MoE: every token gets routed; aux loss near 1.0 for uniform random."""
+    cfg, model, params = _setup("deepseek-moe-16b", compute_dtype="float32")
+    batch = registry.concrete_batch(cfg, TRAIN, batch=4, seq=16)
+    _, aux = model.apply(params, batch)
+    assert 0.5 < float(aux) < 4.0  # near num_experts * E[me*ce] ~= 1 when balanced
+
+
+def test_full_configs_param_counts():
+    """Full configs match the advertised sizes (±15%)."""
+    expected = {
+        "qwen2-vl-72b": 72e9, "yi-6b": 6e9, "gemma-7b": 8.5e9,
+        "gemma3-4b": 4e9, "jamba-1.5-large-398b": 398e9,
+        "deepseek-moe-16b": 16e9, "xlstm-350m": 0.35e9,
+        "llama4-scout-17b-a16e": 109e9,
+    }
+    for arch, want in expected.items():
+        got = registry.get_config(arch).param_count()
+        assert 0.8 * want < got < 1.25 * want, (arch, got, want)
+    # MoE active counts
+    assert abs(registry.get_config("llama4-scout-17b-a16e").active_param_count()
+               - 17e9) < 3e9
+    assert registry.get_config("jamba-1.5-large-398b").active_param_count() < 120e9
+
+
+def test_mrope_positions_affect_output():
+    cfg, model, params = _setup("qwen2-vl-72b", compute_dtype="float32")
+    rng = np.random.default_rng(3)
+    S = 8
+    emb = jnp.asarray(rng.standard_normal((1, S, cfg.d_model)), jnp.float32)
+    p1 = jnp.asarray(np.broadcast_to(np.arange(S), (1, 3, S)).copy(), jnp.int32)
+    p2 = p1.at[0, 1].set(jnp.arange(S) * 3)  # different h-stream positions
+    l1, _ = model.apply(params, {"embeds": emb, "positions": p1})
+    l2, _ = model.apply(params, {"embeds": emb, "positions": p2})
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 0
+
+
+def test_runnable_cells_enumeration():
+    cells = registry.runnable_cells()
+    assert len(cells) == 33  # 40 - 7 long_500k skips
+    skipped = [(a, s.name) for a in registry.list_archs()
+               for s in registry.SHAPES
+               if not registry.cell_is_runnable(a, s)[0]]
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s in skipped)

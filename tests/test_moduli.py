@@ -1,0 +1,71 @@
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import moduli as M
+
+
+def test_default_moduli_pairwise_coprime():
+    assert M.check_pairwise_coprime(M.DEFAULT_MODULI)
+
+
+def test_default_moduli_fit_int8_balanced():
+    for m in M.DEFAULT_MODULI:
+        assert m <= 256
+        assert -(m // 2) >= -128 and (m - 1) // 2 <= 127
+
+
+def test_modinv():
+    for a, m in [(3, 7), (251, 256), (256, 251), (100, 199)]:
+        assert (M.modinv(a, m) * a) % m == 1
+    with pytest.raises(ValueError):
+        M.modinv(4, 256)
+
+
+def test_balanced_range():
+    for m in (256, 251, 7):
+        vals = [M.balanced(x, m) for x in range(-3 * m, 3 * m)]
+        assert min(vals) == -(m // 2)
+        assert max(vals) == (m - 1) // 2
+        for x in range(-3 * m, 3 * m):
+            assert (M.balanced(x, m) - x) % m == 0
+
+
+def test_garner_constants_tables():
+    gc = M.garner_constants(M.DEFAULT_MODULI[:5])
+    r = gc.r
+    pref = [1]
+    for j in range(1, r):
+        pref.append(pref[-1] * gc.moduli[j - 1])
+    for j in range(r):
+        assert (int(gc.inv_pref[j]) * pref[j]) % gc.moduli[j] == 1
+        for l in range(r):
+            assert int(gc.pref_mod[j, l]) == pref[j] % gc.moduli[l]
+        assert gc.pref_f64[j] == float(pref[j])
+    assert gc.prod == pref[-1] * gc.moduli[-1]
+
+
+def test_required_r_matches_paper_range():
+    # Paper §2.3: published INT8 parameter sets use r ∈ [13, 16] for FP64.
+    for k in (256, 1024, 4096, 16384):
+        r = M.required_r(k, payload_bits=53)
+        assert 13 <= r <= 16, (k, r)
+
+
+def test_required_r_monotone_in_k_and_bits():
+    rs = [M.required_r(k, 53) for k in (64, 1024, 16384, 262144)]
+    assert rs == sorted(rs)
+    assert M.required_r(1024, 24) < M.required_r(1024, 53)
+
+
+def test_max_payload_bits_inverse_of_required_r():
+    for k in (256, 4096):
+        r = M.required_r(k, 53)
+        assert M.max_payload_bits(r, k) >= 53
+        assert M.max_payload_bits(r - 1, k) < 53
+
+
+def test_capacity_bits():
+    got = M.capacity_bits((256, 251))
+    assert got == pytest.approx(8 + math.log2(251))

@@ -1,0 +1,67 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import numerics as N
+
+RNG = np.random.default_rng(3)
+
+
+def test_two_sum_eft():
+    a = jnp.asarray(RNG.standard_normal(100) * 1e10)
+    b = jnp.asarray(RNG.standard_normal(100) * 1e-10)
+    s, e = N.two_sum(a, b)
+    # a + b == s + e exactly: check via exact reconstruction in extended precision
+    import math
+    for ai, bi, si, ei in zip(np.asarray(a), np.asarray(b), np.asarray(s), np.asarray(e)):
+        assert float(si) + float(ei) == math.fsum([float(ai), float(bi)]) or \
+            (float(si), float(ei)) == (float(ai) + float(bi), 0.0) or \
+            abs(float(si) + float(ei) - (float(ai) + float(bi))) == 0.0
+
+
+def test_two_prod_eft():
+    a = jnp.asarray(RNG.standard_normal(64))
+    b = jnp.asarray(RNG.standard_normal(64))
+    p, e = N.two_prod(a, b)
+    from fractions import Fraction
+    for ai, bi, pi, ei in zip(np.asarray(a), np.asarray(b), np.asarray(p), np.asarray(e)):
+        exact = Fraction(float(ai)) * Fraction(float(bi))
+        assert Fraction(float(pi)) + Fraction(float(ei)) == exact
+
+
+def test_kahan_beats_naive_f32():
+    x = RNG.standard_normal(200000).astype(np.float32)
+    exact = np.sum(x.astype(np.float64))
+    naive = np.float32(0)
+    for chunk in np.split(x, 100):
+        naive += chunk.sum(dtype=np.float32)
+    kah = float(N.kahan_sum(jnp.asarray(x)))
+    assert abs(kah - exact) <= abs(float(naive) - exact) + 1e-3
+    assert abs(kah - exact) / max(abs(exact), 1) < 1e-5
+
+
+def test_compensated_dot_fp32_path():
+    """§7.1(a): FP32+compensation reaches far beyond bare-f32 accuracy for BLAS-1."""
+    n = 4096
+    x = RNG.standard_normal(n).astype(np.float32)
+    y = RNG.standard_normal(n).astype(np.float32)
+    exact = float(np.dot(x.astype(np.float64), y.astype(np.float64)))
+    comp = float(N.compensated_dot(jnp.asarray(x), jnp.asarray(y)))
+    plain = float(jnp.dot(jnp.asarray(x), jnp.asarray(y)))
+    assert abs(comp - exact) <= abs(plain - exact)
+    assert abs(comp - exact) <= 64 * abs(exact) * 2 ** -24 + 1e-6
+
+
+def test_double_single_roundtrip():
+    x = jnp.asarray(RNG.standard_normal(1000) * 10.0 ** RNG.integers(-20, 20, 1000))
+    hi, lo = N.ds_from_f64(x)
+    assert hi.dtype == jnp.float32 and lo.dtype == jnp.float32
+    back = np.asarray(N.ds_to_f64(hi, lo))
+    np.testing.assert_allclose(back, np.asarray(x), rtol=2.0 ** -45)
+
+
+def test_ds_add():
+    a = N.ds_from_f64(jnp.asarray([1.0 + 2 ** -30]))
+    b = N.ds_from_f64(jnp.asarray([2 ** -31]))
+    s = N.ds_add(a, b)
+    got = float(N.ds_to_f64(*s)[0])
+    assert abs(got - (1.0 + 2 ** -30 + 2 ** -31)) < 2 ** -44

@@ -1,0 +1,53 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ozaki1
+
+U64 = 2.0 ** -53
+RNG = np.random.default_rng(11)
+
+
+def test_slice_width_eq3():
+    # Paper eq. (3): b* = (w_acc - ceil(log2 k)) / 2, clipped to input payload.
+    assert ozaki1.slice_width(256, w_acc=31, input_bits=99) == 11
+    assert ozaki1.slice_width(1024, w_acc=31, input_bits=99) == 10
+    assert ozaki1.slice_width(4096, w_acc=31, input_bits=7) == 7  # input-bound
+    assert ozaki1.slice_width(4096, w_acc=24, input_bits=11) == 6  # fp16 acc-bound
+
+
+def test_decompose_recomposes_exactly():
+    """Slice decomposition is an error-free transformation of the scaled integer."""
+    from repro.core import splitting
+    k = 128
+    x = jnp.asarray(RNG.standard_normal((8, k)))
+    plan = ozaki1.make_plan(k)
+    slices, shift = ozaki1.slice_decompose(x, plan, scale_axis=-1)
+    xi, shift2 = splitting.scale_to_int(x, plan.payload_bits, axis=-1)
+    np.testing.assert_array_equal(np.asarray(shift), np.asarray(shift2))
+    s, b = plan.num_slices, plan.slice_bits
+    # exact integer recomposition (python ints — no float rounding in the check)
+    sl = np.asarray(slices, np.int64)
+    recon = np.zeros((8, k), dtype=object)
+    for p in range(s):
+        recon += sl[p].astype(object) * (2 ** ((s - 1 - p) * b))
+    np.testing.assert_array_equal(recon.astype(np.float64), np.asarray(xi))
+
+
+@pytest.mark.parametrize("k", [64, 512, 4096])
+def test_accuracy(k):
+    a = RNG.standard_normal((16, k))
+    b = RNG.standard_normal((k, 12))
+    c = np.asarray(ozaki1.emulated_matmul(jnp.asarray(a), jnp.asarray(b)))
+    denom = np.abs(a) @ np.abs(b)
+    assert np.max(np.abs(c - a @ b) / denom) <= 16 * U64
+
+
+def test_quadratic_gemm_count_vs_ozaki2_linear():
+    """The paper's headline structural contrast: Θ(S²) vs Θ(r)."""
+    from repro.core import ozaki2
+    k = 4096
+    p1 = ozaki1.make_plan(k)
+    p2 = ozaki2.make_plan(k)
+    assert p1.num_gemms == p1.num_slices ** 2
+    assert p1.num_gemms > 3 * p2.r  # 64 vs 16

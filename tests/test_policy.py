@@ -1,0 +1,66 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import Policy, POLICIES
+
+U64 = 2.0 ** -53
+RNG = np.random.default_rng(5)
+
+
+@pytest.mark.parametrize("name", POLICIES)
+def test_policy_dot_runs_and_shapes(name):
+    x = jnp.asarray(RNG.standard_normal((4, 6, 32)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    y = Policy(name).dot(x, w)
+    assert y.shape == (4, 6, 16)
+    assert y.dtype == x.dtype
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_emulated_policies_match_fp64_oracle():
+    x = jnp.asarray(RNG.standard_normal((8, 64)))
+    w = jnp.asarray(RNG.standard_normal((64, 8)))
+    want = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    denom = np.abs(np.asarray(x)) @ np.abs(np.asarray(w))
+    for name in ("ozaki2_int8", "ozaki2_fp8", "ozaki1_int8"):
+        got = np.asarray(Policy(name).dot(x, w))
+        assert np.max(np.abs(got - want) / denom) <= 16 * U64, name
+
+
+def test_bf16_policy_is_lower_precision():
+    x = jnp.asarray(RNG.standard_normal((16, 128)))
+    w = jnp.asarray(RNG.standard_normal((128, 16)))
+    want = np.asarray(x) @ np.asarray(w)
+    bf16_err = np.max(np.abs(np.asarray(Policy("bf16").dot(x, w)) - want))
+    emu_err = np.max(np.abs(np.asarray(Policy("ozaki2_int8").dot(x, w)) - want))
+    assert emu_err < bf16_err / 1e6  # emulation is FP64-grade; bf16 is ~8-bit
+
+
+def test_emulated_grads_match_fp64_grads():
+    """The custom VJP: gradient of emulated matmul == emulated matmul of gradient."""
+    x = jnp.asarray(RNG.standard_normal((4, 32)))
+    w = jnp.asarray(RNG.standard_normal((32, 4)))
+
+    def loss(policy, xx, ww):
+        return jnp.sum(policy.dot(xx, ww) ** 2)
+
+    gx64, gw64 = jax.grad(lambda a, b: loss(Policy("fp64"), a, b), (0, 1))(x, w)
+    gxe, gwe = jax.grad(lambda a, b: loss(Policy("ozaki2_int8"), a, b), (0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gxe), np.asarray(gx64), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(gwe), np.asarray(gw64), rtol=1e-12)
+
+
+def test_policy_rejects_unknown():
+    with pytest.raises(ValueError):
+        Policy("fp16_emulated")
+
+
+def test_policy_is_hashable_static():
+    @jax.jit
+    def f(x):
+        return Policy("fp32").dot(x, jnp.eye(8, dtype=x.dtype))
+
+    x = jnp.asarray(RNG.standard_normal((3, 8)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x), rtol=1e-6)

@@ -1,0 +1,69 @@
+"""Hypothesis property tests on the system's numeric invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import moduli as M
+from repro.core import ozaki2, splitting
+
+U64 = 2.0 ** -53
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 24), k=st.integers(2, 160), n=st.integers(2, 24),
+    scale_exp=st.integers(-40, 40), seed=st.integers(0, 2 ** 31 - 1),
+    substrate=st.sampled_from(["int8", "fp8"]),
+)
+def test_ozaki2_error_bound_property(m, k, n, scale_exp, seed, substrate):
+    """For any shape/scale, emulated GEMM error stays within the §2.5 band."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)) * 2.0 ** scale_exp
+    b = rng.standard_normal((k, n)) * 2.0 ** -scale_exp
+    plan = ozaki2.make_plan(k, substrate=substrate)
+    c = np.asarray(ozaki2.emulated_matmul(jnp.asarray(a), jnp.asarray(b), plan))
+    denom = np.abs(a) @ np.abs(b) + 1e-300
+    assert np.max(np.abs(c - a @ b) / denom) <= 32 * U64
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-(2 ** 100), 2 ** 100), min_size=1, max_size=32))
+def test_garner_bigint_roundtrip_property(vals):
+    """CRT decompose -> balanced Garner reconstructs any |C| < M/4 exactly."""
+    plan = ozaki2.Plan(moduli=M.DEFAULT_MODULI, payload_bits=53)
+    Mprod = plan.garner.prod
+    vals = [v % (Mprod // 4) - Mprod // 8 for v in vals]
+    cres = np.stack([
+        np.array([M.balanced(v, mod) for v in vals], np.int32)
+        for mod in plan.moduli
+    ])
+    got = np.asarray(ozaki2.garner_reconstruct(jnp.asarray(cres), plan))
+    want = np.array([float(v) for v in vals])
+    # float64 rounding of the exact integer is the only allowed deviation
+    np.testing.assert_allclose(got, want, rtol=8 * U64)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(-(2 ** 52), 2 ** 52))
+def test_hilo_residues_property(x):
+    xi = jnp.asarray([float(x)])
+    hi, lo = splitting.split_hi_lo(xi)
+    assert int(hi[0]) * M.SPLIT_RADIX + int(lo[0]) == x
+    res = splitting.residues_from_hilo(hi, lo, M.DEFAULT_MODULI)
+    for i, mod in enumerate(M.DEFAULT_MODULI):
+        assert (int(res[i, 0]) - x) % mod == 0
+        assert -(mod // 2) <= int(res[i, 0]) <= (mod - 1) // 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(2, 500), payload=st.integers(8, 53),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_scaling_fills_payload_property(k, payload, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((4, k)))
+    xi, shift = splitting.scale_to_int(x, payload, axis=-1)
+    assert float(jnp.max(jnp.abs(xi))) < 2.0 ** payload
+    assert float(jnp.max(jnp.abs(xi))) >= 2.0 ** (payload - 2)

@@ -1,0 +1,248 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, fault tolerance,
+gradient compression, serving engine."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, Pipeline, synth_batch
+from repro.distributed import compression
+from repro.models.transformer import Model
+from repro.optim import adamw
+from repro.train import checkpoint, fault_tolerance
+from repro.train.loop import make_train_step
+
+
+CFG = registry.get_config("yi-6b", smoke=True)
+
+
+# --- data pipeline -----------------------------------------------------------
+
+def test_pipeline_deterministic_given_step():
+    dc = DataConfig(global_batch=4, seq_len=16, seed=7)
+    b1 = synth_batch(dc, CFG, step=3)
+    b2 = synth_batch(dc, CFG, step=3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = synth_batch(dc, CFG, step=4)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_pipeline_host_sharding_disjoint():
+    full = DataConfig(global_batch=8, seq_len=16, num_hosts=1, host_id=0)
+    h0 = DataConfig(global_batch=8, seq_len=16, num_hosts=2, host_id=0)
+    h1 = DataConfig(global_batch=8, seq_len=16, num_hosts=2, host_id=1)
+    b0 = synth_batch(h0, CFG, 0)
+    b1 = synth_batch(h1, CFG, 0)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(np.asarray(b0["tokens"]), np.asarray(b1["tokens"]))
+
+
+def test_pipeline_prefetch_and_resume():
+    dc = DataConfig(global_batch=2, seq_len=8)
+    p = Pipeline(dc, CFG, start_step=0)
+    a = next(p)
+    b = next(p)
+    p.close()
+    p2 = Pipeline(dc, CFG, start_step=1)
+    b_resumed = next(p2)
+    p2.close()
+    np.testing.assert_array_equal(np.asarray(b["tokens"]),
+                                  np.asarray(b_resumed["tokens"]))
+
+
+def test_labels_are_learnable_structure():
+    """Synthetic data has next-token structure (loss can go below uniform)."""
+    dc = DataConfig(global_batch=4, seq_len=16)
+    b = synth_batch(dc, CFG, 0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# --- optimizer ----------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    cfg = adamw.AdamWConfig(lr=0.3, weight_decay=0.0)
+    state = adamw.adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw.adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.ones((4, 4))}
+    cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+    st = adamw.adamw_init(params, cfg)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    p2, st2 = adamw.adamw_update(params, {"w": jnp.ones((4, 4))}, st, cfg)
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((3,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(300), rel=1e-5)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+# --- checkpointing --------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    model = Model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 7, params, extra={"next_step": 8})
+    restored, extra = checkpoint.restore(d, like=params)
+    assert extra["next_step"] == 8
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, restored)
+
+
+def test_checkpoint_latest_ignores_incomplete(tmp_path):
+    model = Model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 1, params)
+    checkpoint.save(d, 5, params)
+    # simulate a crash mid-write of step 9: directory without MANIFEST
+    os.makedirs(os.path.join(d, "step_00000009"))
+    assert checkpoint.latest_step(d) == 5
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    params = {"w": jnp.arange(10.0)}
+    d = str(tmp_path / "ck")
+    path = checkpoint.save(d, 0, params)
+    # flip bytes in the shard
+    f = os.path.join(path, "host0000.npz")
+    data = bytearray(open(f, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(f, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        checkpoint.restore(d, like=params)
+
+
+def test_checkpoint_cleanup(tmp_path):
+    params = {"w": jnp.zeros(3)}
+    d = str(tmp_path / "ck")
+    for s in range(6):
+        checkpoint.save(d, s, params)
+    checkpoint.cleanup(d, keep=2)
+    assert checkpoint.latest_step(d) == 5
+    assert len([n for n in os.listdir(d) if n.startswith("step_")]) == 2
+
+
+def test_async_writer(tmp_path):
+    params = {"w": jnp.arange(5.0)}
+    d = str(tmp_path / "ck")
+    w = checkpoint.AsyncWriter()
+    w.save(d, 3, params)
+    w.wait()
+    restored, _ = checkpoint.restore(d, like=params)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(params["w"]))
+
+
+# --- fault tolerance -------------------------------------------------------------
+
+def test_heartbeat_monitor():
+    hb = fault_tolerance.HeartbeatMonitor(num_hosts=3, timeout_s=10)
+    hb.beat(0, now=100.0)
+    hb.beat(1, now=100.0)
+    hb.beat(2, now=95.0)
+    assert hb.dead_hosts(now=106.0) == [2]
+
+
+def test_straggler_detector_flags_slow_host():
+    det = fault_tolerance.StragglerDetector(num_hosts=8, patience=3)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for step in range(20):
+        times = 1.0 + 0.01 * rng.standard_normal(8)
+        times[5] = 3.0  # host 5 is 3x slower
+        flagged = det.observe(times)
+    assert flagged == [5]
+
+
+def test_run_with_recovery_survives_failures(tmp_path):
+    """Steps fail twice; training resumes from checkpoints and completes."""
+    calls = {"n": 0}
+
+    def step_fn(step, state):
+        calls["n"] += 1
+        if calls["n"] in (7, 15):       # two injected failures
+            raise fault_tolerance.StepFailure("simulated node loss")
+        return {"x": state["x"] + 1.0}, {}
+
+    state, stats = fault_tolerance.run_with_recovery(
+        step_fn, {"x": jnp.zeros(())}, num_steps=20,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=5,
+        sleep=lambda s: None)
+    assert stats["failures"] == 2
+    assert stats["restores"] >= 2
+    assert float(state["x"]) == 20.0    # exactly num_steps effective updates
+
+
+# --- gradient compression ---------------------------------------------------------
+
+def test_compression_error_feedback_preserves_mean():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    state = None
+    total_raw = np.zeros((64, 64), np.float32)
+    total_comp = np.zeros((64, 64), np.float32)
+    for _ in range(50):
+        comp, state = compression.compress_decompress(g, state)
+        total_raw += np.asarray(g["w"])
+        total_comp += np.asarray(comp["w"])
+    # error feedback: accumulated compressed gradients track the true sum
+    rel = np.abs(total_comp - total_raw).max() / np.abs(total_raw).max()
+    assert rel < 0.01
+
+
+def test_compression_ratio_near_4x():
+    g = {"w": jnp.zeros((1024, 1024))}
+    assert 3.5 < compression.compression_ratio(g) <= 4.0
+
+
+def test_training_with_compression_converges():
+    model = Model(CFG)
+    params = model.init(jax.random.PRNGKey(1))
+    step = make_train_step(model, compress_grads=True,
+                           opt_cfg=adamw.AdamWConfig(lr=1e-3))
+    opt = adamw.adamw_init(params)
+    from repro.data.pipeline import DataConfig, synth_batch
+    dc = DataConfig(global_batch=4, seq_len=16)
+    comp_state = None
+    losses = []
+    for i in range(8):
+        batch = synth_batch(dc, CFG, i % 2)
+        params, opt, metrics, comp_state = step(params, opt, batch, comp_state)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# --- serving engine -----------------------------------------------------------------
+
+def test_continuous_batching_completes_requests():
+    from repro.serve.engine import ContinuousBatcher, Request, ServeEngine
+    model = Model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=32)
+    cb = ContinuousBatcher(eng)
+    rng = np.random.default_rng(0)
+    for uid in range(4):                 # 4 requests > 2 slots: forces reuse
+        cb.submit(Request(uid=uid,
+                          prompt=rng.integers(0, CFG.vocab_size, 3).astype(np.int32),
+                          max_new_tokens=4))
+    done = cb.run_to_completion(max_steps=100)
+    assert len(done) == 4
+    for r in done:
+        assert len(r.generated) >= 4
+        assert all(0 <= t < CFG.vocab_size for t in r.generated)

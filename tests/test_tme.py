@@ -1,0 +1,116 @@
+import math
+
+import pytest
+
+from repro.core import tme
+
+
+P = tme.EmulationParams.ozaki2(r=10, substrate="fp8")
+
+
+def test_table2_ridge_points():
+    # Paper Table 2 bottom row: 10.1, 5.0, 0.16, 1.5 FLOPs/B.
+    assert tme.H100.fp64_vector / tme.H100.hbm_tbps == pytest.approx(10.1, abs=0.1)
+    assert tme.B200.fp64_vector / tme.B200.hbm_tbps == pytest.approx(5.0, abs=0.1)
+    assert tme.B300.fp64_vector / tme.B300.hbm_tbps == pytest.approx(0.16, abs=0.01)
+    assert tme.R200.fp64_vector / tme.R200.hbm_tbps == pytest.approx(1.5, abs=0.01)
+
+
+def test_b300_emulation_ceiling():
+    # §3: 5,000 / 10 = 500 TFLOPS dense on B300; 400 on Rubin.
+    assert tme.emulated_perf(1000, tme.B300, P) == pytest.approx(500)
+    assert tme.emulated_perf(1000, tme.R200, P) == pytest.approx(400)
+
+
+def test_case_a_stencil_speedup():
+    # §4.3 Case A worked example: I=0.5 on B300 -> 0.5*8/1.3 ≈ 3.1x.
+    s = tme.speedup(0.5, tme.B300, P)
+    assert s == pytest.approx(0.5 * 8 / 1.3, rel=1e-6)
+    assert 3.0 < s < 3.2
+
+
+def test_case_b_memory_bound_parity():
+    # Case B: both memory-bound -> T_emu/T_nat -> β; fused β=1 gives parity.
+    for spec in (tme.H100, tme.B200):
+        assert tme.speedup(0.2, spec, P) == pytest.approx(1.0)
+    unfused = tme.EmulationParams.ozaki2(r=10, substrate="fp8", fused=False)
+    assert tme.speedup(0.2, tme.H100, unfused) == pytest.approx(1.0 / 10)
+
+
+def test_case_c_compute_bound_gemm():
+    # Case C on B300: ρ/α ≈ 5000/10/1.3 ≈ 380x (vs vector; table uses ~380).
+    s = tme.speedup(1000, tme.B300, P, matrix=False)
+    assert s == pytest.approx(500 / 1.3, rel=1e-6)
+
+
+def test_table3_b300_column():
+    rows = {r["workload"]: r for r in tme.table3_speedups()}
+    assert rows["dense_gemm"]["B300"] == pytest.approx(500 / 1.2, rel=0.01)
+    assert rows["bgemv_b8"]["B300"] == pytest.approx(24.6, rel=0.02)
+    assert rows["bgemv_b2"]["B300"] == pytest.approx(9.2, rel=0.02)
+    assert rows["stencil_7pt"]["B300"] == pytest.approx(3.1, rel=0.02)
+    assert rows["spmv"]["B300"] == pytest.approx(1.23, rel=0.02)
+
+
+def test_table4_key_cells():
+    rows = tme.table4_h100_baseline()
+    def cell(work, path, chip):
+        for r in rows:
+            if r["workload"] == work and r["path"] == path:
+                return r[chip]
+        raise KeyError
+
+    # Paper Table 4 spot checks.
+    assert cell("dense_gemm", "native", "H100") == pytest.approx(67)
+    assert cell("dense_gemm", "ozaki2", "H100") == pytest.approx(198, rel=0.01)
+    assert cell("dense_gemm", "ozaki2", "B300") == pytest.approx(500)
+    assert cell("bgemv_b8", "ozaki2", "B300") == pytest.approx(32)
+    assert cell("bgemv_b8", "ozaki2", "R200") == pytest.approx(88)
+    assert cell("stencil_7pt", "ozaki2", "R200") == pytest.approx(11)
+    assert cell("spmv", "ozaki2", "B300") == pytest.approx(1.6)
+    # H100-relative: memory-bound rows on B300 = HBM ratio 8/3.35 = 2.39x.
+    assert cell("stencil_7pt", "ozaki2", "B300") / cell("stencil_7pt", "native", "H100") \
+        == pytest.approx(8 / 3.35, rel=0.01)
+    # Rubin memory-bound rows = 22/3.35 = 6.57x.
+    assert cell("spmv", "ozaki2", "R200") / cell("spmv", "native", "H100") \
+        == pytest.approx(22 / 3.35, rel=0.01)
+
+
+def test_table5():
+    rows = {r["chip"]: r for r in tme.table5_substrates()}
+    assert rows["H100"]["fp8_advantage"] == pytest.approx(1.0)
+    assert rows["B300"]["fp8_advantage"] == pytest.approx(30.3, rel=0.02)
+    assert rows["B200"]["fp8_advantage"] == pytest.approx(29.0, rel=0.02)
+    assert rows["R200"]["fp8_advantage"] == pytest.approx(16.0, rel=0.02)
+    assert rows["B300"]["ozaki_fp8_ceiling"] == pytest.approx(500)
+
+
+def test_moduli_sensitivity_section_2_4():
+    rows = {r["r"]: r for r in tme.moduli_sensitivity("B300")}
+    # r=11: ceiling drops ~9% (500 -> ~455); r=12: ~17%.
+    assert rows[11]["ceiling_r"] == pytest.approx(455, rel=0.01)
+    assert rows[12]["ceiling_r"] == pytest.approx(417, rel=0.01)
+
+
+def test_emulated_perf_never_exceeds_roofs():
+    for oi in (0.01, 0.2, 1.5, 18, 100, 1e4):
+        for spec in tme.CHIPS.values():
+            e = tme.emulated_perf(oi, spec, P)
+            assert e <= oi * spec.hbm_tbps + 1e-9
+            assert e <= tme.p_low(spec, "fp8") / P.alpha + 1e-9
+
+
+def test_emulation_ridge():
+    # B300: P_fp8/(r·B_mem) = 5000/(10·8) = 62.5 F/B.
+    assert tme.emulation_ridge(tme.B300, P) == pytest.approx(62.5)
+    # §4.4's "I ≲ 18 FLOPS/B" figure corresponds to Rubin: 4000/(10·22) ≈ 18.2.
+    assert tme.emulation_ridge(tme.R200, P) == pytest.approx(18.2, rel=0.01)
+
+
+def test_roofline_terms():
+    t = tme.roofline_terms(hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e11,
+                           chips=256)
+    assert t.compute_s == pytest.approx(1e15 / (256 * 197e12))
+    assert t.memory_s == pytest.approx(1e12 / (256 * 819e9))
+    assert t.collective_s == pytest.approx(1e11 / (256 * 50e9))
+    assert t.dominant == "compute"

@@ -1,0 +1,95 @@
+"""Dispatch-layer benchmarks: plan-cache amortisation and XLA vs Pallas routing.
+
+CSV rows (name,us_per_call,derived):
+  dispatch/plan_cold/us        — first-touch make_plan + Garner setup
+                                 (derived = r of the resolved plan);
+  dispatch/plan_cached/us      — same key through dispatch.get_plan
+                                 (derived = cold/warm speedup);
+  dispatch/route_xla/us        — emulated GEMM via the XLA reference path
+                                 (derived = GFLOP/s of the equivalent FP64 GEMM);
+  dispatch/route_pallas/us     — same GEMM via the fused Pallas kernel
+                                 (interpret on CPU, Mosaic on TPU; same derived);
+  dispatch/policy_dot_warm/us  — Policy.dot hot path with a warm plan cache
+                                 (derived = us spent per call resolving the plan,
+                                 measured by timing get_plan alone).
+
+On this CPU container the pallas row runs the kernel interpreter, so its
+wall-clock is a machinery check, not a perf claim — the TPU roofline story
+lives in the launch tooling.  The cache rows are backend-independent.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch, ozaki2
+from repro.core.policy import Policy
+
+Row = Tuple[str, float, float]
+
+_K = 256
+_SHAPE = (128, _K, 128)
+
+
+def _timed(fn, reps: int = 3) -> float:
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _timed_host(fn, reps: int = 200) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def dispatch_paths() -> List[Row]:
+    rows: List[Row] = []
+    m, k, n = _SHAPE
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)))
+    b = jnp.asarray(rng.standard_normal((k, n)))
+
+    # --- plan cache: cold make_plan+Garner vs cached lookup -------------------
+    dispatch.clear_plan_cache()
+
+    def cold():
+        from repro.core import moduli as moduli_lib
+        moduli_lib.garner_constants.cache_clear()
+        plan = ozaki2.make_plan(k)
+        plan.garner
+        return plan
+
+    us_cold = _timed_host(cold, reps=50)
+    plan = dispatch.get_plan(k)
+    us_warm = _timed_host(lambda: dispatch.get_plan(k))
+    rows.append(("dispatch/plan_cold/us", us_cold, float(plan.r)))
+    rows.append(("dispatch/plan_cached/us", us_warm,
+                 us_cold / max(us_warm, 1e-9)))
+
+    # --- routing: XLA reference vs fused Pallas kernel ------------------------
+    flops = 2.0 * m * k * n
+    us_xla = _timed(lambda: dispatch.matmul(a, b, plan=plan, mode="xla"))
+    rows.append(("dispatch/route_xla/us", us_xla, flops / us_xla * 1e-3))
+    us_pal = _timed(lambda: dispatch.matmul(a, b, plan=plan, mode="pallas"),
+                    reps=1)
+    rows.append(("dispatch/route_pallas/us", us_pal, flops / us_pal * 1e-3))
+
+    # --- Policy.dot hot path with a warm cache --------------------------------
+    pol = Policy("ozaki2_int8")
+    us_dot = _timed(lambda: pol.dot(a, b))
+    us_lookup = _timed_host(lambda: dispatch.get_plan(k, pol.payload_bits,
+                                                      "int8"))
+    rows.append(("dispatch/policy_dot_warm/us", us_dot, us_lookup))
+    return rows

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ozaki2
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 Row = Tuple[str, float, float]
 

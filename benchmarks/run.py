@@ -20,7 +20,10 @@ def _sections():
     # Imports deferred so --section only pays for what it runs.
     from benchmarks import accuracy, tables
 
+    from benchmarks import dispatch as dispatch_bench
+
     secs = {
+        "dispatch": dispatch_bench.dispatch_paths,
         "table1": tables.table1_slice_counts,
         "table2": tables.table2_architectures,
         "table3": tables.table3_speedups,

@@ -11,7 +11,6 @@ Table 4).
 
 from __future__ import annotations
 
-import math
 from typing import List, Tuple
 
 from repro.core import ozaki1, tme

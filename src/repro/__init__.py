@@ -1,0 +1,1 @@
+"""FP8-is-all-you-need reproduction: Ozaki-scheme FP64 emulation in JAX/Pallas."""

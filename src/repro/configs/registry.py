@@ -16,7 +16,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeSpec
+from repro.configs.base import SHAPES_BY_NAME as SHAPES_BY_NAME  # re-export
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
 
 ARCHS: Dict[str, str] = {
     "whisper-medium": "repro.configs.whisper_medium",

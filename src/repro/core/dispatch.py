@@ -1,0 +1,252 @@
+"""Unified emulation dispatch layer — plan cache + XLA/Pallas routing.
+
+The paper's §8 recommendation is that Ozaki-style emulation live *behind* the
+precision-policy interface of the standard libraries, with the register-fused
+kernels as the default execution path.  This module is that seam: every
+emulated matmul in the repo (``Policy.dot``, the HPC solvers, the serving
+engine, the kernel wrappers) resolves its configuration and its execution path
+here instead of hand-rolling both at each call-site.
+
+Three concerns, one layer:
+
+  1. **Plan cache** — ``get_plan`` memoises ``ozaki2.make_plan`` on
+     ``(k, payload_bits, substrate, r, margin_bits)`` and primes the Garner
+     constants at cache-fill time, so the per-call ``make_plan`` +
+     ``required_r`` + Garner recomputation disappears from the hot path
+     (previously paid on *every* ``Policy.dot`` trace and every VJP re-plan).
+
+  2. **Shape-normalising router** — ``matmul`` pads arbitrary ``(m, k, n)``
+     operands up to MXU-friendly block multiples (sublane 8, lane 128) and
+     dispatches to the fused Pallas ``gemm_hilo`` kernel (interpret-mode on
+     CPU, compiled Mosaic on TPU) when the substrate supports it, falling back
+     to the unfused XLA reference ``ozaki2.emulated_matmul`` otherwise.
+     Zero-padding is exact: padded rows/columns scale with shift 0 and
+     contribute zero residues, so the pallas route is *bit-identical* to the
+     XLA route on the unpadded region.
+
+  3. **Mode override** — the route is selected by, in priority order: an
+     explicit ``mode=`` argument, the ``mode_scope``/``set_mode``
+     programmatic override, and the ``REPRO_DISPATCH`` environment variable
+     (``auto | xla | pallas``, default ``auto``).  ``auto`` prefers the fused
+     kernel on TPU backends and the XLA path on CPU (where interpret-mode
+     Pallas is a correctness tool, not a fast path).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ozaki2
+
+MODES = ("auto", "xla", "pallas")
+ENV_VAR = "REPRO_DISPATCH"
+
+# MXU geometry (Pallas TPU tiling constraints): second-minor axis in sublane
+# multiples of 8, minor axis in lane multiples of 128.
+SUBLANE = 8
+LANE = 128
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+# Per-thread override so concurrent engines (e.g. two ServeEngines tracing
+# under different modes) cannot interleave each other's route resolution.
+_tls = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# Mode resolution
+# ---------------------------------------------------------------------------
+
+def _validate_mode(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"dispatch mode must be one of {MODES}, got {mode!r}")
+    return mode
+
+
+def get_mode() -> str:
+    """Effective dispatch mode: programmatic override, else env, else auto."""
+    override = getattr(_tls, "mode", None)
+    if override is not None:
+        return override
+    return _validate_mode(os.environ.get(ENV_VAR, "auto"))
+
+
+def set_mode(mode: Optional[str]) -> None:
+    """Set (or with None, clear) this thread's dispatch-mode override."""
+    _tls.mode = None if mode is None else _validate_mode(mode)
+
+
+@contextlib.contextmanager
+def mode_scope(mode: Optional[str]):
+    """Temporarily force a dispatch mode (None = inherit the ambient mode)."""
+    prev = getattr(_tls, "mode", None)
+    set_mode(mode if mode is not None else prev)
+    try:
+        yield
+    finally:
+        _tls.mode = prev
+
+
+# ---------------------------------------------------------------------------
+# Plan / Garner-constant cache
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _cached_plan(k: int, payload_bits: int, substrate: str, r: Optional[int],
+                 margin_bits: int) -> ozaki2.Plan:
+    plan = ozaki2.make_plan(k, payload_bits, r=r, substrate=substrate,
+                            margin_bits=margin_bits)
+    plan.garner  # noqa: B018 — prime the Garner constants at cache-fill time
+    return plan
+
+
+def get_plan(k: int, payload_bits: int = 53, substrate: str = "int8",
+             r: Optional[int] = None, margin_bits: int = 2) -> ozaki2.Plan:
+    """Cache-resolved Plan for contractions of length k (Garner pre-primed).
+
+    Semantically identical to ``ozaki2.make_plan`` but amortised: repeated
+    lookups (every policy dot, every VJP re-plan, every CG iteration) return
+    the same object without re-running moduli selection or Garner setup.
+    """
+    return _cached_plan(int(k), int(payload_bits), substrate, r, margin_bits)
+
+
+def plan_cache_info():
+    """lru_cache statistics for the plan cache (tests / benchmarks)."""
+    return _cached_plan.cache_info()
+
+
+def clear_plan_cache() -> None:
+    _cached_plan.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Shape normalisation
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def choose_blocks(m: int, k: int, n: int) -> Tuple[int, int, int]:
+    """MXU-friendly (bm, bn, bk) for an (m, k) x (k, n) problem.
+
+    Large problems use the default 128/128/256 tiling; smaller axes shrink to
+    the dimension rounded up to the hardware granule (sublane 8 for the
+    second-minor m-axis, lane 128 for the minor n/k axes) so padding stays
+    bounded while tiles keep legal Mosaic shapes.
+    """
+    bm = DEFAULT_BM if m >= DEFAULT_BM else _round_up(m, SUBLANE)
+    bn = DEFAULT_BN if n >= DEFAULT_BN else _round_up(n, LANE)
+    # bk must divide the lane-padded K; falling back to one lane (128) keeps
+    # the K padding at < one lane of zeros (bk=256 on k=257 would pad to 512).
+    kp = _round_up(k, LANE)
+    bk = DEFAULT_BK if kp % DEFAULT_BK == 0 else LANE
+    return bm, bn, bk
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pad_operands(a: jax.Array, b: jax.Array,
+                 blocks: Optional[Tuple[int, int, int]] = None
+                 ) -> Tuple[jax.Array, jax.Array, Tuple[int, int, int]]:
+    """Zero-pad (m,k)x(k,n) operands to block multiples.  Exactness: padded
+    rows/cols are all-zero, scale with shift 0 and contribute zero residues,
+    so the product over the real region is unchanged bit-for-bit."""
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = blocks if blocks is not None else choose_blocks(m, k, n)
+    a = _pad_axis(_pad_axis(a, 0, bm), 1, bk)
+    b = _pad_axis(_pad_axis(b, 0, bk), 1, bn)
+    return a, b, (bm, bn, bk)
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def pallas_supported(plan: ozaki2.Plan) -> bool:
+    """The fused kernels implement the int8 residue substrate only; the FP8
+    Karatsuba substrate runs through the XLA reference path."""
+    return plan.substrate == "int8"
+
+
+def choose_route(plan: ozaki2.Plan, mode: Optional[str] = None) -> str:
+    """Resolve a concrete route ('xla' | 'pallas') for this plan and mode."""
+    mode = _validate_mode(mode) if mode is not None else get_mode()
+    if mode == "xla" or not pallas_supported(plan):
+        return "xla"
+    if mode == "pallas":
+        return "pallas"
+    # auto: the fused path is the production route on TPU; on CPU the Pallas
+    # interpreter is a correctness oracle, not a fast path.
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _working_float():
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+# RHS widths at or below this route to the fused batched-GEMV kernel (paper
+# Alg. 1's small-B regime) instead of padding the N axis up to a full GEMM lane.
+GEMV_MAX_B = 16
+
+
+def _pallas_matmul(a: jax.Array, b: jax.Array, plan: ozaki2.Plan) -> jax.Array:
+    from repro.kernels import ops  # deferred: kernels import core, not vice versa
+
+    m, k = a.shape
+    n = b.shape[1]
+    if n <= GEMV_MAX_B:
+        # Narrow RHS (matvec / small batch): the GEMV kernel keeps B on the MXU
+        # minor dim rather than zero-padding it to a 128-wide GEMM tile.
+        bm, _, bk = choose_blocks(m, k, n)
+        ap = _pad_axis(_pad_axis(a, 0, bm), 1, bk)
+        bp = _pad_axis(b, 0, bk)
+        out = ops.ozaki_gemv(ap, bp, plan=plan, bm=bm, bk=bk)
+        return out[:m]
+    ap, bp, (bm, bn, bk) = pad_operands(a, b)
+    out = ops.ozaki_gemm(ap, bp, plan=plan, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]
+
+
+def matmul(a: jax.Array, b: jax.Array, plan: Optional[ozaki2.Plan] = None,
+           payload_bits: int = 53, substrate: str = "int8",
+           mode: Optional[str] = None) -> jax.Array:
+    """Emulated FP64-accurate C = A @ B through the dispatch layer.
+
+    a: (m, k), b: (k, n); returns working-float (m, n) regardless of route —
+    callers needing the kernel-native digits/ds output representations use
+    ``repro.kernels.ops`` directly.  The plan comes from the process cache
+    unless given explicitly; the execution path follows ``choose_route``.
+    """
+    if plan is None:
+        plan = get_plan(a.shape[-1], payload_bits, substrate)
+    if choose_route(plan, mode) == "pallas":
+        return _pallas_matmul(a, b, plan)
+    return ozaki2.emulated_matmul(a, b, plan, out_dtype=_working_float())
+
+
+def dot(x: jax.Array, w: jax.Array, plan: Optional[ozaki2.Plan] = None,
+        payload_bits: int = 53, substrate: str = "int8",
+        mode: Optional[str] = None) -> jax.Array:
+    """(..., k) x (k, n) emulated dot — the shape contract of ``Policy.dot``."""
+    lead = x.shape[:-1]
+    out = matmul(x.reshape((-1, x.shape[-1])), w, plan=plan,
+                 payload_bits=payload_bits, substrate=substrate, mode=mode)
+    return out.reshape(lead + (w.shape[-1],))

@@ -21,11 +21,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import fp8_quant
 from repro.core import moduli as moduli_lib
@@ -52,8 +51,10 @@ class Plan:
     def r(self) -> int:
         return len(self.moduli)
 
-    @property
+    @functools.cached_property
     def garner(self) -> moduli_lib.GarnerConstants:
+        # cached_property writes through the instance __dict__, which frozen
+        # dataclasses permit; hash/eq still come from the declared fields.
         return moduli_lib.garner_constants(self.moduli)
 
     @property

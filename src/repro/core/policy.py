@@ -25,12 +25,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ozaki1, ozaki2
+from repro.core import dispatch, ozaki1, ozaki2
 
 POLICIES = ("bf16", "fp32", "fp64", "ozaki2_int8", "ozaki2_fp8", "ozaki1_int8")
 
@@ -54,7 +53,7 @@ def _flatten_dot(fn):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def ozaki2_dot(a: jax.Array, b: jax.Array, plan: ozaki2.Plan) -> jax.Array:
-    return ozaki2.emulated_matmul(a, b, plan, out_dtype=_working_f64())
+    return dispatch.matmul(a, b, plan=plan)
 
 
 def _ozaki2_dot_fwd(a, b, plan):
@@ -64,13 +63,14 @@ def _ozaki2_dot_fwd(a, b, plan):
 def _ozaki2_dot_bwd(plan, res, g):
     a, b = res
     # Gradients of C = A B under the same emulated arithmetic:
-    #   dA = g B^T, dB = A^T g — contraction length changes, so re-plan.
-    plan_da = ozaki2.make_plan(g.shape[-1], plan.payload_bits,
-                               substrate=plan.substrate)
-    plan_db = ozaki2.make_plan(a.shape[0], plan.payload_bits,
-                               substrate=plan.substrate)
-    da = ozaki2.emulated_matmul(g, b.T, plan_da, out_dtype=_working_f64())
-    db = ozaki2.emulated_matmul(a.T, g, plan_db, out_dtype=_working_f64())
+    #   dA = g B^T, dB = A^T g — contraction length changes, so re-plan
+    #   (cache-resolved: the bwd plans are the fwd plans of other layers).
+    plan_da = dispatch.get_plan(g.shape[-1], plan.payload_bits,
+                                substrate=plan.substrate)
+    plan_db = dispatch.get_plan(a.shape[0], plan.payload_bits,
+                                substrate=plan.substrate)
+    da = dispatch.matmul(g, b.T, plan=plan_da)
+    db = dispatch.matmul(a.T, g, plan=plan_db)
     return da.astype(a.dtype), db.astype(b.dtype)
 
 
@@ -134,8 +134,8 @@ class Policy:
             return jnp.dot(x.astype(f64), w.astype(f64)).astype(x.dtype)
         if self.name in ("ozaki2_int8", "ozaki2_fp8"):
             substrate = self.name.split("_")[1]
-            plan = ozaki2.make_plan(x.shape[-1], self.payload_bits,
-                                    substrate=substrate)
+            plan = dispatch.get_plan(x.shape[-1], self.payload_bits,
+                                     substrate=substrate)
             f64 = _working_f64()
             out = _flatten_dot(ozaki2_dot)(x.astype(f64), w.astype(f64), plan)
             return out.astype(x.dtype)

@@ -16,7 +16,6 @@ roofline analysis of the dry-runs (launch/roofline.py adds the collective term).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Tuple
 
 # ---------------------------------------------------------------------------

@@ -15,8 +15,7 @@ tests/test_distributed.py; the full-model wiring hook is ``split_stage_params``.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -16,12 +16,12 @@ kernel.  tests/test_hpc_cg.py shows convergence matching native-float64 CG.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import numerics, ozaki2
+from repro.core import dispatch, numerics, ozaki2
 from repro.kernels import ops
 
 
@@ -63,7 +63,27 @@ def cg_solve(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
 def cg_solve_bell(a_val: jax.Array, a_col: jax.Array, b: jax.Array,
                   plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
                   **kw) -> CGResult:
-    """CG with the fused Ozaki-II Blocked-ELL SpMV as the matvec."""
+    """CG with the fused Ozaki-II Blocked-ELL SpMV as the matvec.
+
+    The plan resolves once from the dispatch cache (not per iteration).
+    """
+    if plan is None:
+        plan = dispatch.get_plan(a_val.shape[1], margin_bits=4)
+
     def matvec(x):
         return ops.ozaki_spmv_bell(a_val, a_col, x, plan=plan, out_rep=out_rep)
+    return cg_solve(matvec, b, **kw)
+
+
+def cg_solve_dense(a: jax.Array, b: jax.Array,
+                   plan: Optional[ozaki2.Plan] = None,
+                   mode: Optional[str] = None, **kw) -> CGResult:
+    """CG on a dense SPD matrix with the emulated matvec routed through the
+    dispatch layer (XLA reference or fused Pallas GEMM per ``mode`` /
+    ``REPRO_DISPATCH``) — the §7.1(a) recipe for dense operators."""
+    if plan is None:
+        plan = dispatch.get_plan(a.shape[-1], margin_bits=4)
+
+    def matvec(x):
+        return dispatch.matmul(a, x[:, None], plan=plan, mode=mode)[:, 0]
     return cg_solve(matvec, b, **kw)

@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import moduli as moduli_lib
 from repro.core import ozaki2
 from repro.core.moduli import SPLIT_RADIX
 

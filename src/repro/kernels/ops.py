@@ -8,13 +8,12 @@ backend the same code lowers through Mosaic.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ozaki2, splitting
+from repro.core import dispatch, ozaki2, splitting
 from repro.kernels import common
 from repro.kernels import ozaki_gemm as _gemm
 from repro.kernels import ozaki_gemv as _gemv
@@ -60,7 +59,7 @@ def ozaki_gemm(a: jax.Array, b: jax.Array, plan: Optional[ozaki2.Plan] = None,
     M, K = a.shape
     _, N = b.shape
     if plan is None:
-        plan = ozaki2.make_plan(K)
+        plan = dispatch.get_plan(K)
     if interpret is None:
         interpret = _default_interpret()
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
@@ -86,7 +85,7 @@ def ozaki_gemv(a: jax.Array, x: jax.Array, plan: Optional[ozaki2.Plan] = None,
     M, N = a.shape
     _, B = x.shape
     if plan is None:
-        plan = ozaki2.make_plan(N)
+        plan = dispatch.get_plan(N)
     if interpret is None:
         interpret = _default_interpret()
     bm, bk = min(bm, M), min(bk, N)
@@ -114,7 +113,7 @@ def ozaki_stencil7(u: jax.Array, c: jax.Array,
     [centre, -x, +x, -y, +y, -z, +z].  Boundary points use zero halo.
     """
     if plan is None:
-        plan = ozaki2.make_plan(8, margin_bits=4)
+        plan = dispatch.get_plan(8, margin_bits=4)
     if interpret is None:
         interpret = _default_interpret()
     return _stencil.stencil7(u, c, plan, out_rep=out_rep, bz=bz,
@@ -130,7 +129,7 @@ def ozaki_spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
     indices (structural-zero slots must point at a valid column, value 0.0).
     """
     if plan is None:
-        plan = ozaki2.make_plan(a_val.shape[1], margin_bits=4)
+        plan = dispatch.get_plan(a_val.shape[1], margin_bits=4)
     if interpret is None:
         interpret = _default_interpret()
     return _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep, br=br,

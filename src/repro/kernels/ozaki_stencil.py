@@ -19,7 +19,6 @@ native-FP64 footprint, β = 1 (out_rep="digits" pays r/8 instead, see common.py)
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -26,12 +26,10 @@ Counts are GLOBAL (pre-SPMD logical shapes); the dry-run divides by the mesh siz
 
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 _ELEMENTWISE = {
     "add", "sub", "mul", "div", "max", "min", "neg", "abs", "sign",

@@ -21,7 +21,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import SHAPES, SHAPES_BY_NAME

@@ -14,9 +14,8 @@ per-op traffic weights (all-reduce counts 2x: reduce-scatter + all-gather phases
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core import tme
 

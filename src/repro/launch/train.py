@@ -15,7 +15,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.data.pipeline import DataConfig, Pipeline

@@ -9,7 +9,7 @@ long_500k decode cell memory-feasible (DESIGN.md §5).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

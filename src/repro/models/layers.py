@@ -9,7 +9,7 @@ Ozaki-II int8/fp8 path by flipping ``ModelConfig.policy_name``.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ divisible by the period (e.g. gemma3's 34 = 6·5 + 4).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

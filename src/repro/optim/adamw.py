@@ -9,7 +9,7 @@ ZeRO-style fully-sharded optimizer for free under GSPMD.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,12 +14,13 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.models.transformer import Model
 
 Pytree = Any
@@ -39,14 +40,23 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params: Pytree, batch_slots: int,
-                 max_seq: int):
+                 max_seq: int, dispatch_mode: Optional[str] = None):
+        """``dispatch_mode`` pins the emulation dispatch route (auto | xla |
+        pallas) for every matmul this engine traces, so serving picks up the
+        fused Pallas path with no model-code changes; None inherits the
+        ambient ``REPRO_DISPATCH`` setting."""
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
+        self.dispatch_mode = dispatch_mode
         self.cache = model.init_cache(batch_slots, max_seq)
         self.pos = np.zeros(batch_slots, np.int32)
         self._decode = jax.jit(model.decode_step)
+
+    def _decode_call(self, *args):
+        with dispatch.mode_scope(self.dispatch_mode):
+            return self._decode(*args)
 
     def prefill_slot(self, slot: int, prompt: np.ndarray) -> int:
         """Feed a prompt through decode steps to fill the cache slot.
@@ -58,7 +68,7 @@ class ServeEngine:
         for t, tok in enumerate(prompt):
             tokens = np.zeros((self.slots, 1), np.int32)
             tokens[slot, 0] = tok
-            logits, self.cache = self._decode(
+            logits, self.cache = self._decode_call(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(t, jnp.int32))
             last = int(jnp.argmax(logits[slot, 0]))
@@ -66,7 +76,7 @@ class ServeEngine:
         return last
 
     def decode_step_all(self, tokens: np.ndarray, pos: int) -> np.ndarray:
-        logits, self.cache = self._decode(
+        logits, self.cache = self._decode_call(
             self.params, self.cache, jnp.asarray(tokens.reshape(-1, 1)),
             jnp.asarray(pos, jnp.int32))
         return np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)

@@ -7,7 +7,6 @@ compression, microbatch accumulation — all jax.lax control flow, pjit-compatib
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

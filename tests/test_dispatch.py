@@ -1,0 +1,192 @@
+"""Dispatch layer: plan caching, XLA/Pallas routing, padding, mode override."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch, ozaki2
+from repro.core.policy import Policy
+
+U64 = 2.0 ** -53
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+def test_get_plan_matches_make_plan():
+    for k, p, sub in [(64, 53, "int8"), (300, 53, "fp8"), (64, 24, "int8")]:
+        assert dispatch.get_plan(k, p, sub) == ozaki2.make_plan(k, p, substrate=sub)
+
+
+def test_get_plan_is_cached_identity():
+    a = dispatch.get_plan(96)
+    b = dispatch.get_plan(96)
+    assert a is b
+    assert a.garner is b.garner  # Garner constants primed once, shared
+
+
+def test_policy_dot_hot_path_skips_make_plan(monkeypatch):
+    """After the cache is warm, Policy.dot never re-enters make_plan."""
+    x = jnp.asarray(RNG.standard_normal((4, 48)))
+    w = jnp.asarray(RNG.standard_normal((48, 4)))
+    Policy("ozaki2_int8").dot(x, w)  # warm the (k=48, p=53, int8) entry
+
+    calls = {"n": 0}
+    real = ozaki2.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ozaki2, "make_plan", counting)
+    for _ in range(3):
+        Policy("ozaki2_int8").dot(x, w)
+    assert calls["n"] == 0
+
+
+def test_plan_cache_distinguishes_substrate_and_payload():
+    assert dispatch.get_plan(64, 53, "int8") is not dispatch.get_plan(64, 53, "fp8")
+    assert dispatch.get_plan(64, 53, "int8") is not dispatch.get_plan(64, 24, "int8")
+
+
+# ---------------------------------------------------------------------------
+# Mode resolution / env override
+# ---------------------------------------------------------------------------
+
+def test_env_var_selects_mode(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    assert dispatch.get_mode() == "pallas"
+    monkeypatch.setenv(dispatch.ENV_VAR, "xla")
+    assert dispatch.get_mode() == "xla"
+    monkeypatch.delenv(dispatch.ENV_VAR)
+    assert dispatch.get_mode() == "auto"
+
+
+def test_invalid_mode_rejected(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_VAR, "cuda")
+    with pytest.raises(ValueError):
+        dispatch.get_mode()
+    with pytest.raises(ValueError):
+        dispatch.set_mode("fast")
+
+
+def test_mode_scope_overrides_env_and_restores(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_VAR, "xla")
+    with dispatch.mode_scope("pallas"):
+        assert dispatch.get_mode() == "pallas"
+        with dispatch.mode_scope(None):     # None inherits
+            assert dispatch.get_mode() == "pallas"
+    assert dispatch.get_mode() == "xla"
+
+
+def test_choose_route():
+    int8 = dispatch.get_plan(64, substrate="int8")
+    fp8 = dispatch.get_plan(64, substrate="fp8")
+    assert dispatch.choose_route(int8, "xla") == "xla"
+    assert dispatch.choose_route(int8, "pallas") == "pallas"
+    # fp8 has no fused kernel: always the XLA reference path
+    assert dispatch.choose_route(fp8, "pallas") == "xla"
+    # auto on this CPU container avoids interpret-mode Pallas
+    if jax.default_backend() != "tpu":
+        assert dispatch.choose_route(int8, "auto") == "xla"
+
+
+# ---------------------------------------------------------------------------
+# Routing correctness
+# ---------------------------------------------------------------------------
+
+def test_pallas_route_bit_identical_evenly_tiled(monkeypatch):
+    """REPRO_DISPATCH=pallas on an evenly-tiled f64 matmul == XLA bit-for-bit."""
+    x = jnp.asarray(RNG.standard_normal((128, 256)))
+    w = jnp.asarray(RNG.standard_normal((256, 128)))
+    pol = Policy("ozaki2_int8")
+    monkeypatch.setenv(dispatch.ENV_VAR, "xla")
+    y_xla = np.asarray(pol.dot(x, w))
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    y_pal = np.asarray(pol.dot(x, w))
+    np.testing.assert_array_equal(y_xla, y_pal)
+
+
+@pytest.mark.parametrize("mkn", [(40, 70, 24), (8, 48, 8), (129, 257, 100)])
+def test_pallas_route_padding_ragged_shapes(mkn):
+    """Ragged shapes pad to MXU blocks; results stay bit-identical to XLA."""
+    m, k, n = mkn
+    a = jnp.asarray(RNG.standard_normal((m, k)))
+    b = jnp.asarray(RNG.standard_normal((k, n)))
+    y_xla = np.asarray(dispatch.matmul(a, b, mode="xla"))
+    y_pal = np.asarray(dispatch.matmul(a, b, mode="pallas"))
+    assert y_pal.shape == (m, n)
+    np.testing.assert_array_equal(y_xla, y_pal)
+    denom = np.abs(np.asarray(a)) @ np.abs(np.asarray(b)) + 1e-300
+    want = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    assert np.max(np.abs(y_pal - want) / denom) <= 16 * U64
+
+
+@pytest.mark.parametrize("n", [1, 8, dispatch.GEMV_MAX_B, dispatch.GEMV_MAX_B + 1])
+def test_pallas_narrow_rhs_routes_via_gemv(n):
+    """n <= GEMV_MAX_B uses the fused GEMV kernel; both sides bit-match XLA."""
+    a = jnp.asarray(RNG.standard_normal((40, 64)))
+    b = jnp.asarray(RNG.standard_normal((64, n)))
+    y_xla = np.asarray(dispatch.matmul(a, b, mode="xla"))
+    y_pal = np.asarray(dispatch.matmul(a, b, mode="pallas"))
+    np.testing.assert_array_equal(y_xla, y_pal)
+
+
+def test_pad_operands_blocks_divide_padded_shapes():
+    a = jnp.zeros((40, 70))
+    b = jnp.zeros((70, 24))
+    ap, bp, (bm, bn, bk) = dispatch.pad_operands(a, b)
+    assert ap.shape[0] % bm == 0 and ap.shape[1] % bk == 0
+    assert bp.shape[0] % bk == 0 and bp.shape[1] % bn == 0
+    assert ap.shape[0] % dispatch.SUBLANE == 0
+    assert bp.shape[1] % dispatch.LANE == 0
+
+
+def test_dispatch_dot_batched_leading_dims():
+    x = jnp.asarray(RNG.standard_normal((3, 5, 32)))
+    w = jnp.asarray(RNG.standard_normal((32, 16)))
+    y = dispatch.dot(x, w, mode="pallas")
+    want = np.asarray(x).reshape(-1, 32) @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 16), want, rtol=1e-12)
+
+
+def test_policy_grads_under_pallas_route(monkeypatch):
+    """The custom VJP stays exact when the forward/backward route is fused."""
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    x = jnp.asarray(RNG.standard_normal((8, 32)))
+    w = jnp.asarray(RNG.standard_normal((32, 8)))
+
+    def loss(pol, a, b):
+        return jnp.sum(pol.dot(a, b) ** 2)
+
+    gx64, gw64 = jax.grad(lambda a, b: loss(Policy("fp64"), a, b), (0, 1))(x, w)
+    gxe, gwe = jax.grad(
+        lambda a, b: loss(Policy("ozaki2_int8"), a, b), (0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gxe), np.asarray(gx64), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(gwe), np.asarray(gw64), rtol=1e-12)
+
+
+def test_fp8_policy_ignores_pallas_request(monkeypatch):
+    """ozaki2_fp8 has no fused kernel; pallas mode falls back and stays exact."""
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    x = jnp.asarray(RNG.standard_normal((8, 64)))
+    w = jnp.asarray(RNG.standard_normal((64, 8)))
+    got = np.asarray(Policy("ozaki2_fp8").dot(x, w))
+    want = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    denom = np.abs(np.asarray(x)) @ np.abs(np.asarray(w))
+    assert np.max(np.abs(got - want) / denom) <= 16 * U64
+
+
+def test_cg_dense_dispatch_converges():
+    from repro.hpc import spmv_formats
+    from repro.hpc.cg import cg_solve_dense
+
+    dense = jnp.asarray(spmv_formats.laplacian_2d(6, 6))
+    b = jnp.asarray(RNG.standard_normal(36))
+    res = cg_solve_dense(dense, b, tol=1e-10)
+    assert res.converged
+    np.testing.assert_allclose(np.asarray(dense) @ np.asarray(res.x),
+                               np.asarray(b), atol=1e-8)

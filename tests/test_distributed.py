@@ -4,13 +4,15 @@ These run in a SUBPROCESS with --xla_force_host_platform_device_count=8 so the
 main test process keeps its single-device view (assignment requirement).
 """
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+# Each test spawns a fresh 8-device subprocess (recompiles everything).
+pytestmark = pytest.mark.slow
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

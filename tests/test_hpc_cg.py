@@ -36,8 +36,13 @@ def test_cg_native_converges():
     np.testing.assert_allclose(dense @ x, np.asarray(b), atol=1e-8)
 
 
+@pytest.mark.slow
 def test_cg_with_ozaki_spmv_matches_native():
-    """The paper's claim: the emulated path changes nothing for the solver."""
+    """The paper's claim: the emulated path changes nothing for the solver.
+
+    slow: the interpret-mode Blocked-ELL SpMV pays a multi-minute XLA compile
+    on CPU (the gather-heavy kernel graph); the compiled TPU path does not.
+    """
     dense = spmv_formats.laplacian_2d(8, 8)
     val, col = spmv_formats.to_blocked_ell(dense, bw=8)
     rng = np.random.default_rng(1)

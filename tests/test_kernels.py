@@ -145,6 +145,7 @@ def _random_bell(m, n, bw, zero_frac=0.2):
     return jnp.asarray(val), jnp.asarray(col), jnp.asarray(RNG.standard_normal(n))
 
 
+@pytest.mark.slow  # interpret-mode SpMV: multi-minute XLA compile on CPU
 @pytest.mark.parametrize("mnbw", [(50, 64, 8), (128, 32, 16), (17, 100, 4)])
 @pytest.mark.parametrize("out_rep", ["f64", "digits"])
 def test_spmv_accuracy_sweep(mnbw, out_rep):
@@ -157,6 +158,7 @@ def test_spmv_accuracy_sweep(mnbw, out_rep):
     assert np.max(np.abs(np.asarray(y) - want) / denom) <= 16 * U64
 
 
+@pytest.mark.slow  # interpret-mode SpMV: multi-minute XLA compile on CPU
 def test_spmv_laplacian_1d():
     """A real PDE matrix: 1-D Laplacian in ELL form, y = A x exact vs dense."""
     n = 96

@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install -e .[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import moduli as M
 from repro.core import ozaki2, splitting

@@ -1,10 +1,7 @@
 """Sharding-rule unit tests (no multi-device requirement: specs only)."""
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
 from repro.distributed import sharding
@@ -15,8 +12,13 @@ def _fake_mesh(data=16, model=16, pod=None):
     """AbstractMesh stands in for the production mesh (no devices needed)."""
     from jax.sharding import AbstractMesh
     if pod:
-        return AbstractMesh((pod, data, model), ("pod", "data", "model"))
-    return AbstractMesh((data, model), ("data", "model"))
+        sizes, names = (pod, data, model), ("pod", "data", "model")
+    else:
+        sizes, names = (data, model), ("data", "model")
+    try:
+        return AbstractMesh(sizes, names)            # jax >= 0.5 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # 0.4.x: shape_tuple
 
 
 def _specs_for(arch, layout="tp", mesh=None):

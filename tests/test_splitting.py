@@ -1,6 +1,5 @@
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import splitting as S
 from repro.core.moduli import DEFAULT_MODULI, SPLIT_RADIX

@@ -89,8 +89,11 @@ def all_kernels() -> List[Row]:
     val = jnp.asarray(val_np)
     x = jnp.asarray(rng.standard_normal(Ns))
     for rep in ("f64", "digits"):
+        # interpret=True pins the row to the Pallas kernel: the CPU default now
+        # reroutes to the jnp reference, which would silently change what this
+        # perf-trajectory row measures (and invalidate the fused beta model).
         us = _timed(lambda rep=rep: ops.ozaki_spmv_bell(val, col, x, out_rep=rep,
-                                                        br=256))
+                                                        br=256, interpret=True))
         plan_v = ozaki2.make_plan(bw, margin_bits=4)
         out_bytes = {"f64": 8, "digits": plan_v.r}[rep] * Ms
         # native bytes: values + colidx + x-gather (cached ~1x) + y

@@ -16,45 +16,49 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 
+def _section(module: str, attr: str):
+    # Import deferred into the thunk so --section only pays for what it runs.
+    def run():
+        import importlib
+        return getattr(importlib.import_module(f"benchmarks.{module}"), attr)()
+    return run
+
+
 def _sections():
-    # Imports deferred so --section only pays for what it runs.
-    from benchmarks import accuracy, tables
-
-    from benchmarks import dispatch as dispatch_bench
-
-    secs = {
-        "dispatch": dispatch_bench.dispatch_paths,
-        "table1": tables.table1_slice_counts,
-        "table2": tables.table2_architectures,
-        "table3": tables.table3_speedups,
-        "table4": tables.table4_h100_baseline,
-        "table5": tables.table5_substrates,
-        "moduli": tables.moduli_requirements,
-        "error_vs_r": accuracy.error_vs_r,
-        "volume": accuracy.ozaki1_vs_ozaki2_volume,
-        "wallclock": accuracy.emulation_wallclock,
+    return {
+        "dispatch": _section("dispatch", "dispatch_paths"),
+        "spectral": _section("spectral", "spectral_section"),
+        "table1": _section("tables", "table1_slice_counts"),
+        "table2": _section("tables", "table2_architectures"),
+        "table3": _section("tables", "table3_speedups"),
+        "table4": _section("tables", "table4_h100_baseline"),
+        "table5": _section("tables", "table5_substrates"),
+        "moduli": _section("tables", "moduli_requirements"),
+        "error_vs_r": _section("accuracy", "error_vs_r"),
+        "volume": _section("accuracy", "ozaki1_vs_ozaki2_volume"),
+        "wallclock": _section("accuracy", "emulation_wallclock"),
+        # An import failure here surfaces as the section's ERROR row (exit 1)
+        # rather than the section silently vanishing from the registry.
+        "kernels": _section("kernels", "all_kernels"),
+        "models": _section("models", "smoke_step_timings"),
     }
-    try:
-        from benchmarks import kernels as kernel_bench
-        secs["kernels"] = kernel_bench.all_kernels
-    except ImportError:
-        pass
-    try:
-        from benchmarks import models as model_bench
-        secs["models"] = model_bench.smoke_step_timings
-    except ImportError:
-        pass
-    return secs
 
 
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--section", default=None,
-                        help="run a single section (default: all)")
+                        help="comma-separated section name(s) (default: all)")
     args = parser.parse_args()
 
     secs = _sections()
-    names = [args.section] if args.section else list(secs)
+    if args.section:
+        names = [s.strip() for s in args.section.split(",") if s.strip()]
+        unknown = [s for s in names if s not in secs]
+        if unknown:
+            parser.error(f"unknown section(s) {unknown}; "
+                         f"available: {', '.join(secs)}")
+    else:
+        names = list(secs)
     print("name,us_per_call,derived")
     ok = True
     for name in names:

@@ -1,0 +1,97 @@
+"""Spectral-subsystem benchmarks: emulated FFT accuracy/latency + TME model.
+
+CSV rows (name,us_per_call,derived):
+  spectral/fft_n{64,256,384,1024}/us — emulated FFT through the XLA dispatch
+                                       route (derived = relative l2 error vs
+                                       the jnp.fft.fft FP64 oracle);
+  spectral/fft_pallas_n256/us        — same transform on the fused-kernel route
+                                       (derived = max |pallas - xla|, expected
+                                       exactly 0: the routes are bit-identical);
+  spectral/rfft_n384/us              — real-input transform (derived = rel err
+                                       vs jnp.fft.rfft);
+  spectral/poisson2d_32x32/us        — spectral Poisson direct solve (derived =
+                                       true relative residual);
+  spectral/compensated_dot_n4096/us  — Dot2 in f32 (derived = plain-f32 error /
+                                       compensated-f32 error vs the f64 oracle);
+  spectral/tme_fft_b300_speedup      — TME-projected emulated-over-native FFT
+                                       speedup on B300 (model row, us = 0).
+
+On this CPU container the pallas row runs the kernel interpreter — a
+machinery/parity check, not a perf claim (same caveat as the dispatch section).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import spectral
+from repro.core import compensated, tme
+from repro.hpc import poisson
+
+Row = Tuple[str, float, float]
+
+
+def _timed(fn, reps: int = 3) -> Tuple[float, object]:
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def _rel(got, want) -> float:
+    got, want = np.asarray(got), np.asarray(want)
+    return float(np.linalg.norm(got - want) / np.linalg.norm(want))
+
+
+def spectral_section() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    for n in (64, 256, 384, 1024):
+        x = jnp.asarray(rng.standard_normal(n) + 1j * rng.standard_normal(n))
+        us, got = _timed(lambda x=x: spectral.fft(x, mode="xla"))
+        rows.append((f"spectral/fft_n{n}/us", us, _rel(got, jnp.fft.fft(x))))
+
+    x = jnp.asarray(rng.standard_normal(256) + 1j * rng.standard_normal(256))
+    us, got_p = _timed(lambda: spectral.fft(x, mode="pallas"), reps=1)
+    got_x = spectral.fft(x, mode="xla")
+    rows.append(("spectral/fft_pallas_n256/us", us,
+                 float(jnp.max(jnp.abs(got_p - got_x)))))
+
+    xr = jnp.asarray(rng.standard_normal(384))
+    us, got = _timed(lambda: spectral.rfft(xr, mode="xla"))
+    rows.append(("spectral/rfft_n384/us", us, _rel(got, jnp.fft.rfft(xr))))
+
+    f, _ = poisson.manufactured_rhs((32, 32), seed=1)
+    us, _ = _timed(lambda: poisson.poisson_solve_periodic(f, mode="xla"))
+    rows.append(("spectral/poisson2d_32x32/us", us,
+                 poisson.poisson_solve_checked(f, mode="xla").residual))
+
+    a32 = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+    b32 = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+    exact = float(np.dot(np.asarray(a32, np.float64), np.asarray(b32, np.float64)))
+    us, comp = _timed(lambda: compensated.compensated_dot(a32, b32))
+    plain_err = abs(float(jnp.dot(a32, b32)) - exact)
+    comp_err = abs(float(comp) - exact)
+    rows.append(("spectral/compensated_dot_n4096/us", us,
+                 plain_err / max(comp_err, 1e-30)))
+
+    import dataclasses
+    params = dataclasses.replace(tme.EmulationParams.ozaki2(r=10, substrate="fp8"),
+                                 gamma=tme.garner_gamma(tme.B300, 10))
+    n_model = 1 << 18
+    native = tme.fft_native_time(n_model, tme.B300, batch=4096)
+    emu = tme.fft_emulated_time(n_model, tme.B300, params, batch=4096)
+    gamma_s = sum(params.gamma * s.n_out
+                  for s in tme.bailey_fft_stages(n_model, 4096))
+    rows.append(("spectral/tme_fft_b300_speedup", 0.0, native / emu))
+    rows.append(("spectral/tme_fft_b300_gamma_fraction", 0.0, gamma_s / emu))
+    return rows

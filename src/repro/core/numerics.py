@@ -69,19 +69,11 @@ def compensated_dot(x: jax.Array, y: jax.Array) -> jax.Array:
 
     This is the FP32+Kahan BLAS-1 path of §7.1(a): on hardware whose FP64 pipe has
     collapsed, running this in FP32 gives ~2^-48 effective accuracy at FP32 speed.
+    The implementation lives in ``repro.core.compensated`` (the canonical home of
+    the compensated reductions); this alias is kept for existing callers.
     """
-    p, e = two_prod(x, y)
-
-    def step(carry, inp):
-        s, c = carry
-        pi, ei = inp
-        s, e2 = two_sum(s, pi)
-        c = c + (e2 + ei)
-        return (s, c), None
-
-    (s, c), _ = jax.lax.scan(step, (jnp.zeros((), x.dtype), jnp.zeros((), x.dtype)),
-                             (p, e))
-    return s + c
+    from repro.core import compensated  # deferred: compensated imports our EFTs
+    return compensated.compensated_dot(x, y)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,7 @@ roofline analysis of the dry-runs (launch/roofline.py adds the collective term).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -205,6 +206,108 @@ def moduli_sensitivity(chip: str = "B300") -> List[dict]:
             "ceiling_r": spec.fp8 / r,
             "ceiling_3r1": spec.fp8 / (3 * r + 1),
         })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Bailey four-step FFT stages (companion FFT analysis; Part 2 gamma-roof)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTStage:
+    """One stage of the four-step FFT in TME terms.
+
+    W is real FLOPs (a complex MAC through the realified GEMM costs 8), Q is
+    HBM bytes, n_out the per-stage Garner reconstruction count (the gamma
+    multiplier: each GEMM pass reconstructs 2n real outputs per batch element).
+    """
+    name: str
+    W: float
+    Q: float
+    n_out: float
+
+    def emulated_s(self, spec: ChipSpec, params: EmulationParams) -> float:
+        return emulated_time(self.W, self.Q, self.n_out, spec, params)
+
+
+def bailey_fft_stages(n: int, batch: int = 1,
+                      working_bytes: int = 16) -> List[FFTStage]:
+    """Per-stage (W, Q, n_out) of the four-step FFT over a length-n batch.
+
+    Mirrors the *recursion* of ``repro.spectral.bailey.dft_stacked`` using the
+    same ``choose_factors``/``DENSE_MAX`` the executed transform uses, so the
+    model cannot desynchronise from it: each recursion level contributes a
+    twiddle scaling and a transpose (pure data movement), and every leaf is a
+    dense DFT GEMM ``gemm_n{f}`` — the emulated part, charging 8f MACs-worth
+    of real FLOPs per element and a gamma term on its 2n real outputs per
+    batch element.  ``working_bytes`` is per complex element (16 for
+    FP64-equivalent working precision).
+    """
+    # Deferred: spectral sits above core in the layering; this is the one
+    # place the model reaches up, to stay pinned to the executed factors.
+    from repro.spectral.bailey import choose_factors
+    from repro.spectral.dft import DENSE_MAX
+
+    pass_q = 2.0 * working_bytes * n * batch          # stream in + out
+    factors = choose_factors(n) if n > DENSE_MAX else None
+    if factors is None:                               # dense leaf (or prime)
+        return [FFTStage(f"gemm_n{n}", 8.0 * n * n * batch, pass_q,
+                         2.0 * n * batch)]
+    n1, n2 = factors
+    stages = list(bailey_fft_stages(n1, n2 * batch, working_bytes))
+    stages.append(FFTStage(f"twiddle_n{n}", 6.0 * n * batch,
+                           pass_q + working_bytes * n, 0.0))
+    stages.append(FFTStage(f"transpose_n{n}", 0.0, pass_q, 0.0))
+    stages.extend(bailey_fft_stages(n2, n1 * batch, working_bytes))
+    return stages
+
+
+def garner_gamma(spec: ChipSpec, r: int = 10) -> float:
+    """Crude per-output Garner latency model: the O(r²) mixed-radix small-int
+    ops charged against the chip's int8 pipe (paper Def. 1's gamma).  Callers
+    that measured a real reconstruction rate should pass their own gamma; this
+    default exists so the gamma term is non-zero under the paper's defaults."""
+    return float(r * r) / (p_low(spec, "int8") * 1e12)
+
+
+def fft_emulated_time(n: int, spec: ChipSpec, params: EmulationParams,
+                      batch: int = 1) -> float:
+    """Sum of paper eq. (9) over the four-step stages (gamma terms included)."""
+    return sum(s.emulated_s(spec, params) for s in bailey_fft_stages(n, batch))
+
+
+def fft_native_time(n: int, spec: ChipSpec, batch: int = 1,
+                    working_bytes: int = 16) -> float:
+    """Native-FP64 radix-2 FFT through paper eq. (8): W = 5 n log2 n."""
+    W = 5.0 * n * math.log2(n) * batch
+    Q = 2.0 * working_bytes * n * batch
+    return native_time(W, Q, spec)
+
+
+def table_fft(r: int = 10, batch: int = 4096,
+              sizes: Tuple[int, ...] = (1 << 10, 1 << 14, 1 << 18)) -> List[dict]:
+    """Projected emulated-over-native FFT speedups with the per-stage gamma
+    split (the companion paper's gamma-roof view of the spectral dwarf).
+
+    gamma defaults to the ``garner_gamma`` model per chip (so the
+    reconstruction term is visible, not silently zero)."""
+    rows = []
+    base = EmulationParams.ozaki2(r=r, substrate="fp8")
+    for n in sizes:
+        for chip in ("H100", "B200", "B300", "R200"):
+            spec = CHIPS[chip]
+            params = dataclasses.replace(base, gamma=garner_gamma(spec, r))
+            stages = bailey_fft_stages(n, batch)
+            emu = sum(s.emulated_s(spec, params) for s in stages)
+            gamma_s = sum(params.gamma * s.n_out for s in stages)
+            rows.append({
+                "n": n, "chip": chip,
+                "native_s": fft_native_time(n, spec, batch),
+                "emulated_s": emu,
+                "speedup": fft_native_time(n, spec, batch) / emu if emu else 0.0,
+                "gamma_fraction": gamma_s / emu if emu else 0.0,
+            })
     return rows
 
 

@@ -3,25 +3,30 @@
 The audit's recipe for iterative solvers on FP64-starved hardware:
   * the SpMV (the dominant cost) runs through the fused Ozaki-II Blocked-ELL
     kernel at FP64-equivalent accuracy,
-  * the BLAS-1 reductions (dot products, norms) run in working precision with
-    Kahan/Dot2 compensation — "B300's FP32 pipe is well above the BLAS-1
-    memory-roof requirement; not binding",
+  * the BLAS-1 reductions (dot products, norms) run on the healthy vector pipe
+    with compensated accumulation (``repro.core.compensated``) — "B300's FP32
+    pipe is well above the BLAS-1 memory-roof requirement; not binding",
   * no iterative-refinement outer loop is needed: the emulated SpMV inherits
     the componentwise error bound of the emulated GEMM (§2.5).
 
-``cg_solve`` is generic over the matvec; ``cg_solve_bell`` wires in the Pallas
-kernel.  tests/test_hpc_cg.py shows convergence matching native-float64 CG.
+The residual recurrence is driven by the compensated reductions; alongside it
+the solver records the same quantities re-computed with plain working-precision
+dots (``history_plain``) so the accuracy delta of the compensated path is
+directly observable (tests/test_hpc_cg.py).
+
+``cg_solve`` is generic over the matvec; ``cg_solve_bell`` wires in the
+Blocked-ELL SpMV kernel and ``cg_solve_dense`` the dispatch-routed dense GEMV.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dispatch, numerics, ozaki2
+from repro.core import compensated, dispatch, ozaki2
 from repro.kernels import ops
 
 
@@ -31,20 +36,33 @@ class CGResult:
     iters: int
     residual: float
     converged: bool
-    history: list
+    history: list                 # compensated relative-residual recurrence
+    history_plain: list = dataclasses.field(default_factory=list)
+    # same reductions in plain working precision (observability, not control)
 
 
 def cg_solve(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
              x0: Optional[jax.Array] = None, tol: float = 1e-10,
              maxiter: int = 500,
-             dot: Callable = numerics.compensated_dot) -> CGResult:
-    """Textbook CG with compensated reductions."""
+             dot: Callable = compensated.compensated_dot,
+             norm: Callable = compensated.compensated_norm,
+             record_plain: bool = True) -> CGResult:
+    """Textbook CG; compensated reductions drive the recurrence and the stop
+    test, a plain-dot shadow history records what uncompensated working
+    precision would have reported for the same iterates.  ``record_plain=False``
+    drops the shadow reduction (one extra O(n) dot + host sync per iteration)
+    for production solves that never read it."""
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)
     p = r
     rs = dot(r, r)
-    bnorm = jnp.sqrt(dot(b, b))
-    history = [float(jnp.sqrt(rs) / bnorm)]
+    bnorm = norm(b)
+    bnorm_plain = jnp.sqrt(jnp.dot(b, b)) if record_plain else None
+
+    history: List[float] = [float(jnp.sqrt(rs) / bnorm)]
+    history_plain: List[float] = []
+    if record_plain:
+        history_plain.append(float(jnp.sqrt(jnp.dot(r, r)) / bnorm_plain))
     it = 0
     for it in range(1, maxiter + 1):
         ap = matvec(p)
@@ -53,11 +71,13 @@ def cg_solve(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
         r = r - alpha * ap
         rs_new = dot(r, r)
         history.append(float(jnp.sqrt(rs_new) / bnorm))
+        if record_plain:
+            history_plain.append(float(jnp.sqrt(jnp.dot(r, r)) / bnorm_plain))
         if history[-1] < tol:
-            return CGResult(x, it, history[-1], True, history)
+            return CGResult(x, it, history[-1], True, history, history_plain)
         p = r + (rs_new / rs) * p
         rs = rs_new
-    return CGResult(x, it, history[-1], False, history)
+    return CGResult(x, it, history[-1], False, history, history_plain)
 
 
 def cg_solve_bell(a_val: jax.Array, a_col: jax.Array, b: jax.Array,

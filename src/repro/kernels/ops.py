@@ -127,10 +127,19 @@ def ozaki_spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
 
     a_val: (M, bw) padded per-row nonzero values; a_col: (M, bw) int32 column
     indices (structural-zero slots must point at a valid column, value 0.0).
+
+    Routing: on CPU backends the default (``interpret=None``) takes the
+    bit-identical unfused jnp reference — interpret-mode ``pallas_call`` hands
+    XLA a gather-heavy graph with a multi-minute compile, which is a
+    correctness oracle, not a path anyone should pay by default.  Pass
+    ``interpret=True`` to force the Pallas interpreter (parity tests); on TPU
+    the fused Mosaic kernel is the default.
     """
     if plan is None:
         plan = dispatch.get_plan(a_val.shape[1], margin_bits=4)
     if interpret is None:
-        interpret = _default_interpret()
+        if _default_interpret():
+            return _spmv.spmv_bell_ref(a_val, a_col, x, plan, out_rep=out_rep)
+        interpret = False
     return _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep, br=br,
                            interpret=interpret)

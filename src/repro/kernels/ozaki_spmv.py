@@ -54,6 +54,69 @@ def _spmv_kernel(av_hi_ref, av_lo_ref, col_ref, x_hi_ref, x_lo_ref, out_ref, *,
         out_ref[...] = common.stack_digits_int8(digits)
 
 
+def _decompose_operands(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
+                        plan: ozaki2.Plan):
+    """Shared prologue of the fused kernel and the jnp reference: Phase-1
+    scaling, hi/lo split, column cast.  One implementation keeps the two
+    paths' bit-identity structural rather than a testing promise."""
+    f64 = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    av, sa = splitting.scale_to_int(a_val.astype(f64), plan.payload_bits, axis=-1)
+    xi, sx = _global_scale_to_int(x.astype(f64), plan.payload_bits)
+    av_hi, av_lo = splitting.split_hi_lo(av)
+    x_hi, x_lo = splitting.split_hi_lo(xi)
+    return av_hi, av_lo, a_col.astype(jnp.int32), x_hi, x_lo, sa, sx
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _spmv_ref_digits(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
+                     plan: ozaki2.Plan):
+    """Reference front half: scaling, residues, contraction, Garner digits."""
+    av_hi, av_lo, cols, x_hi, x_lo, sa, sx = _decompose_operands(
+        a_val, a_col, x, plan)
+
+    a_res = common.residues_int32(av_hi, av_lo, plan.moduli)
+    x_res = common.residues_int32(x_hi[cols], x_lo[cols], plan.moduli)
+    accs = [common.balanced_mod(jnp.sum(a_res[i] * x_res[i], axis=-1), m)
+            for i, m in enumerate(plan.moduli)]
+    return common.garner_digits(accs, plan), sa, sx
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "out_rep"))
+def _spmv_ref_epilogue(digits, sa: jax.Array, sx: jax.Array,
+                       plan: ozaki2.Plan, out_rep: str) -> jax.Array:
+    """Reference back half: digit reconstruction + exact unscale."""
+    f64 = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    if out_rep in ("f64", "digits"):
+        y = common.digits_to_f64(digits, plan, out_dtype=f64)
+    elif out_rep == "ds":
+        hi, lo = common.digits_to_ds(digits, plan)
+        y = hi.astype(f64) + lo.astype(f64)
+    else:
+        raise ValueError(f"out_rep must be one of {common.OUT_REPS}")
+    return jnp.ldexp(y, jnp.broadcast_to(-(sa + sx), y.shape))
+
+
+def spmv_bell_ref(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
+                  plan: ozaki2.Plan, out_rep: str = "f64") -> jax.Array:
+    """Unfused jnp reference of the fused kernel's arithmetic, bit-identical.
+
+    Same scaling, hi/lo split, residues, per-modulus contraction and Garner
+    digits as ``_spmv_kernel`` — every integer step is exact and row-local, so
+    the result matches the Pallas path bit-for-bit regardless of row blocking.
+    This is the CPU fast path for tests and solvers: interpret-mode
+    ``pl.pallas_call`` hands XLA a gather-heavy graph that costs minutes to
+    compile (ROADMAP open item).
+
+    Deliberately jitted as two stages split at the integer digit boundary: the
+    combined residue graph + double-double reconstruction triggers a
+    pathological XLA-CPU optimisation pass (minutes for r = 15), while the
+    halves each compile in ~1 s.  The digits crossing the boundary are exact
+    int32, so the split cannot change a single bit of the result.
+    """
+    digits, sa, sx = _spmv_ref_digits(a_val, a_col, x, plan)
+    return _spmv_ref_epilogue(tuple(digits), sa, sx, plan, out_rep)
+
+
 @functools.partial(jax.jit, static_argnames=("plan", "out_rep", "br", "interpret"))
 def spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
               plan: ozaki2.Plan, out_rep: str = "f64", br: int = 128,
@@ -64,11 +127,8 @@ def spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
     br = min(br, M)
     pm = (-M) % br
 
-    av, sa = splitting.scale_to_int(a_val.astype(f64), plan.payload_bits, axis=-1)
-    xi, sx = _global_scale_to_int(x.astype(f64), plan.payload_bits)
-    av_hi, av_lo = splitting.split_hi_lo(av)
-    x_hi, x_lo = splitting.split_hi_lo(xi)
-    col = a_col.astype(jnp.int32)
+    av_hi, av_lo, col, x_hi, x_lo, sa, sx = _decompose_operands(
+        a_val, a_col, x, plan)
     if pm:
         av_hi = jnp.pad(av_hi, ((0, pm), (0, 0)))
         av_lo = jnp.pad(av_lo, ((0, pm), (0, 0)))

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import tme
 
@@ -116,6 +116,34 @@ def model_flops_for(cfg, shape) -> float:
     if shape.kind == "prefill":
         return 2.0 * n * shape.seq_len * shape.global_batch
     return 2.0 * n * shape.global_batch    # decode: one token per sequence
+
+
+def fft_stage_terms(n: int, batch: int = 1, chips: int = 1,
+                    params: Optional[tme.EmulationParams] = None,
+                    spec: Optional[tme.ChipSpec] = None
+                    ) -> List[Tuple[str, tme.RooflineTerms, float]]:
+    """Per-stage roofline terms of the Bailey four-step FFT (spectral section).
+
+    Returns (stage_name, three-term RooflineTerms, gamma_seconds) per stage:
+    the compute/memory terms come from the stage (W, Q) scaled by the TME
+    emulation parameters, the gamma term is the per-stage Garner reconstruction
+    latency — the knob the companion paper's gamma-roof analysis turns.  When
+    no params are given, gamma comes from the ``tme.garner_gamma`` model (alpha
+    doubles as r for the Ozaki-II defaults) so the term is not silently zero.
+    """
+    spec = spec or tme.TPU_V5E
+    if params is None:
+        base = tme.EmulationParams.ozaki2()
+        params = dataclasses.replace(
+            base, gamma=tme.garner_gamma(spec, int(base.alpha)))
+    p_low = tme.p_low(spec, params.substrate) * 1e12
+    out = []
+    for s in tme.bailey_fft_stages(n, batch):
+        terms = tme.roofline_terms(
+            params.alpha * s.W, params.beta * s.Q, 0.0, chips,
+            peak_flops=p_low, hbm_bw=spec.hbm_tbps * 1e12)
+        out.append((s.name, terms, params.gamma * s.n_out))
+    return out
 
 
 def render_markdown_row(r: CellReport) -> str:

@@ -1,0 +1,87 @@
+"""Compensated reductions (repro.core.compensated): Neumaier sum, Dot2, nrm2."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compensated as C
+from repro.core import numerics
+
+RNG = np.random.default_rng(5)
+
+
+def test_eft_reexports_are_the_numerics_primitives():
+    assert C.two_sum is numerics.two_sum
+    assert C.two_prod is numerics.two_prod
+    assert C.fast_two_sum is numerics.fast_two_sum
+
+
+def test_neumaier_recovers_cancellation_kahan_misses():
+    """The classic Kahan failure case: a huge term arriving after small ones."""
+    x = jnp.asarray([1.0, 1e100, 1.0, -1e100])
+    assert float(C.neumaier_sum(x)) == 2.0
+
+
+def test_neumaier_matches_fsum_ill_conditioned():
+    vals = list(RNG.standard_normal(500) * 10.0 ** RNG.integers(-12, 12, 500))
+    exact = math.fsum(vals)
+    got = float(C.neumaier_sum(jnp.asarray(vals)))
+    scale = math.fsum(abs(v) for v in vals)
+    assert abs(got - exact) <= 4 * 2.0 ** -53 * scale
+
+
+def test_neumaier_sum_axis():
+    x = jnp.asarray(RNG.standard_normal((4, 64)))
+    got = np.asarray(C.neumaier_sum(x, axis=-1))
+    np.testing.assert_allclose(got, np.sum(np.asarray(x), axis=-1), rtol=1e-14)
+
+
+def test_compensated_dot_twice_working_precision_f32():
+    n = 4096
+    x = RNG.standard_normal(n).astype(np.float32)
+    y = RNG.standard_normal(n).astype(np.float32)
+    exact = float(np.dot(x.astype(np.float64), y.astype(np.float64)))
+    comp = float(C.compensated_dot(jnp.asarray(x), jnp.asarray(y)))
+    plain = float(jnp.dot(jnp.asarray(x), jnp.asarray(y)))
+    assert abs(comp - exact) <= abs(plain - exact)
+    assert abs(comp - exact) <= 64 * abs(exact) * 2 ** -24 + 1e-6
+
+
+def test_compensated_norm_matches_f64_oracle():
+    x = RNG.standard_normal(2048).astype(np.float32)
+    exact = float(np.linalg.norm(x.astype(np.float64)))
+    got = float(C.compensated_norm(jnp.asarray(x)))
+    assert abs(got - exact) <= 4 * exact * 2 ** -24
+
+
+def test_compensated_norm_overflow_underflow_safe():
+    big = jnp.asarray([1e200, 1e200, -1e200])
+    assert np.isfinite(float(C.compensated_norm(big)))
+    np.testing.assert_allclose(float(C.compensated_norm(big)),
+                               1e200 * np.sqrt(3.0), rtol=1e-12)
+    tiny = jnp.asarray([1e-300, 2e-300])
+    np.testing.assert_allclose(float(C.compensated_norm(tiny)),
+                               np.sqrt(5.0) * 1e-300, rtol=1e-12)
+    assert float(C.compensated_norm(jnp.zeros(8))) == 0.0
+
+
+def test_neumaier_vs_fsum_property():
+    hyp = pytest.importorskip("hypothesis",
+                              reason="optional dep: pip install -e .[test]")
+    given, settings, st = hyp.given, hyp.settings, hyp.strategies
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(min_value=-1e15, max_value=1e15,
+                              allow_nan=False, allow_infinity=False,
+                              width=64),
+                    min_size=1, max_size=64))
+    def check(vals):
+        """Neumaier summation tracks math.fsum to ~2 ulp of the term scale."""
+        exact = math.fsum(vals)
+        got = float(C.neumaier_sum(jnp.asarray(vals, jnp.float64)))
+        scale = math.fsum(abs(v) for v in vals)
+        assert abs(got - exact) <= 4 * 2.0 ** -53 * scale + 5e-324
+
+    check()

@@ -36,12 +36,12 @@ def test_cg_native_converges():
     np.testing.assert_allclose(dense @ x, np.asarray(b), atol=1e-8)
 
 
-@pytest.mark.slow
 def test_cg_with_ozaki_spmv_matches_native():
     """The paper's claim: the emulated path changes nothing for the solver.
 
-    slow: the interpret-mode Blocked-ELL SpMV pays a multi-minute XLA compile
-    on CPU (the gather-heavy kernel graph); the compiled TPU path does not.
+    Runs the bit-identical jnp reference SpMV on CPU (the interpret-mode
+    Pallas path, with its multi-minute XLA compile, is covered by the slow
+    parity test in test_kernels.py).
     """
     dense = spmv_formats.laplacian_2d(8, 8)
     val, col = spmv_formats.to_blocked_ell(dense, bw=8)
@@ -61,3 +61,32 @@ def test_cg_residual_history_monotonic_tail():
     res = cg_solve(lambda x: jnp.asarray(dense) @ x, b, tol=1e-10, maxiter=200)
     assert res.converged
     assert res.history[-1] < 1e-10
+
+
+def test_cg_records_plain_and_compensated_histories():
+    """Both residual histories cover every iterate and measure the same r."""
+    dense = spmv_formats.laplacian_1d(32)
+    b = jnp.asarray(np.random.default_rng(3).standard_normal(32))
+    res = cg_solve(lambda x: jnp.asarray(dense) @ x, b, tol=1e-10)
+    assert len(res.history_plain) == len(res.history) == res.iters + 1
+    # In f64 the two agree to rounding; they are distinct computations.
+    np.testing.assert_allclose(res.history_plain, res.history, rtol=1e-10)
+    # Opt-out drops the shadow reduction entirely.
+    quiet = cg_solve(lambda x: jnp.asarray(dense) @ x, b, tol=1e-10,
+                     record_plain=False)
+    assert quiet.history_plain == [] and quiet.converged
+
+
+def test_cg_compensated_vs_plain_delta_observable_f32():
+    """In f32 the plain-dot residual history drifts from the compensated one
+    by far more than f64 roundoff — the §7.1(a) delta, made visible."""
+    dense = jnp.asarray(spmv_formats.laplacian_2d(8, 8), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(4).standard_normal(64), jnp.float32)
+    res = cg_solve(lambda x: dense @ x, b, tol=1e-6, maxiter=80)
+    deltas = [abs(p - c) / max(c, 1e-30)
+              for p, c in zip(res.history_plain, res.history)]
+    # same quantity ...
+    assert max(deltas) < 1e-2
+    # ... but the plain-f32 reductions are visibly off the compensated ones
+    # (the compensated dot carries ~2^-48; plain f32 only ~2^-24·n).
+    assert max(deltas) > 2.0 ** -24

@@ -145,7 +145,6 @@ def _random_bell(m, n, bw, zero_frac=0.2):
     return jnp.asarray(val), jnp.asarray(col), jnp.asarray(RNG.standard_normal(n))
 
 
-@pytest.mark.slow  # interpret-mode SpMV: multi-minute XLA compile on CPU
 @pytest.mark.parametrize("mnbw", [(50, 64, 8), (128, 32, 16), (17, 100, 4)])
 @pytest.mark.parametrize("out_rep", ["f64", "digits"])
 def test_spmv_accuracy_sweep(mnbw, out_rep):
@@ -158,7 +157,6 @@ def test_spmv_accuracy_sweep(mnbw, out_rep):
     assert np.max(np.abs(np.asarray(y) - want) / denom) <= 16 * U64
 
 
-@pytest.mark.slow  # interpret-mode SpMV: multi-minute XLA compile on CPU
 def test_spmv_laplacian_1d():
     """A real PDE matrix: 1-D Laplacian in ELL form, y = A x exact vs dense."""
     n = 96
@@ -174,3 +172,21 @@ def test_spmv_laplacian_1d():
     y = np.asarray(ops.ozaki_spmv_bell(jnp.asarray(val), jnp.asarray(col),
                                        jnp.asarray(x), br=32))
     np.testing.assert_allclose(y, dense @ x, rtol=0, atol=4 * U64 * 4 * np.abs(x).max())
+
+
+@pytest.mark.slow  # interpret-mode SpMV: multi-minute XLA compile on CPU
+def test_spmv_ref_fallback_bit_identical_to_pallas_interpreter():
+    """The jnp reference path (the CPU default) matches the Pallas kernel
+    bit-for-bit: same scaling, residues, contraction, and Garner digits.
+
+    A 24-bit-payload plan (r = 7) keeps the in-kernel Garner graph small
+    enough for the interpreter to compile in minutes, not tens of minutes —
+    bit-identity is plan-independent, so one plan pins the whole path.
+    """
+    from repro.core import ozaki2
+    plan = ozaki2.make_plan(4, payload_bits=24)
+    val, col, x = _random_bell(24, 32, 4)
+    y_ref = np.asarray(ops.ozaki_spmv_bell(val, col, x, plan=plan))  # reference
+    y_pal = np.asarray(ops.ozaki_spmv_bell(val, col, x, plan=plan, br=8,
+                                           interpret=True))          # Pallas
+    np.testing.assert_array_equal(y_ref, y_pal)

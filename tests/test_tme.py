@@ -113,3 +113,50 @@ def test_roofline_terms():
     assert t.memory_s == pytest.approx(1e12 / (256 * 819e9))
     assert t.collective_s == pytest.approx(1e11 / (256 * 50e9))
     assert t.dominant == "compute"
+
+
+def test_bailey_fft_stages_inventory():
+    # 1024 = 32*32, both factors dense: one recursion level, two GEMM leaves.
+    stages = tme.bailey_fft_stages(1024, batch=8)
+    assert [s.name for s in stages] == ["gemm_n32", "twiddle_n1024",
+                                        "transpose_n1024", "gemm_n32"]
+    # each dense leaf: 8f MACs-worth of FLOPs per element of the full stack
+    assert stages[0].W == stages[3].W == 8.0 * 32 * 1024 * 8
+    # each GEMM pass reconstructs 2n real outputs per batch element
+    assert stages[0].n_out == 2.0 * 1024 * 8
+    assert stages[2].W == 0.0          # transpose is pure data movement
+
+
+def test_bailey_fft_stages_recurse_like_the_executed_transform():
+    """Model stages mirror dft_stacked's recursion: 2^18 -> 512*512 with each
+    512 factored again (16*32), so GEMM leaves are all dense-sized."""
+    from repro.spectral.dft import DENSE_MAX
+    stages = tme.bailey_fft_stages(1 << 18)
+    names = [s.name for s in stages]
+    assert "twiddle_n262144" in names and "twiddle_n512" in names
+    leaf_sizes = {int(s.name[len("gemm_n"):]) for s in stages
+                  if s.name.startswith("gemm_n")}
+    assert leaf_sizes == {16, 32}
+    assert all(f <= DENSE_MAX for f in leaf_sizes)
+
+
+def test_fft_gamma_term_not_silently_zero():
+    """The per-stage gamma split must be visible under the model defaults."""
+    rows = tme.table_fft(r=10, batch=4096, sizes=(1 << 18,))
+    assert all(r["gamma_fraction"] > 0.0 for r in rows)
+    assert all(r["gamma_fraction"] < 0.5 for r in rows)   # amortised, not dominant
+    assert tme.garner_gamma(tme.B300, 10) == pytest.approx(100 / 165e12)
+
+
+def test_fft_emulated_beats_native_on_post_fp64_chips():
+    """The companion-paper claim in TME terms: emulation loses on H100's
+    healthy FP64 pipe and wins on B300 where FP64 has collapsed."""
+    import dataclasses
+    for chip, expect_win in (("H100", False), ("B300", True)):
+        spec = tme.CHIPS[chip]
+        params = dataclasses.replace(
+            tme.EmulationParams.ozaki2(r=10, substrate="fp8"),
+            gamma=tme.garner_gamma(spec, 10))
+        nat = tme.fft_native_time(1 << 18, spec, batch=4096)
+        emu = tme.fft_emulated_time(1 << 18, spec, params, batch=4096)
+        assert (nat / emu > 1.0) == expect_win

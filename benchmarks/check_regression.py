@@ -1,0 +1,120 @@
+"""Perf-trajectory gate: compare BENCH_<section>.json runs against a baseline.
+
+Usage (from the repo root, after ``python -m benchmarks.run --json``):
+
+    python -m benchmarks.check_regression BENCH_*.json
+    python -m benchmarks.check_regression --baseline benchmarks/baseline.json \
+        --threshold 2.0 BENCH_dispatch.json
+    python -m benchmarks.check_regression --write-baseline BENCH_*.json
+
+The committed ``benchmarks/baseline.json`` is nested ``{section: {row: us}}``;
+each ``BENCH_<section>.json`` (flat ``{row: us}``, section taken from the file
+name) is compared row-by-row.  Rows slower than ``threshold``× baseline print a
+``::warning::`` annotation (rendered inline by GitHub Actions) — **warn, never
+fail**: shared-runner noise must not break the build, the trajectory is for
+humans reading the annotations and the uploaded artifacts.  Exit status is 0
+unless the inputs themselves are unusable (missing/corrupt files) or
+``--strict`` is given, which turns regressions into a non-zero exit for local
+use.
+
+``--write-baseline`` regenerates the baseline file from the given runs instead
+of comparing (used to seed/refresh ``benchmarks/baseline.json``).
+
+Deliberately dependency-free (no jax import): CI runs it in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from typing import Dict
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+_BENCH_RE = re.compile(r"BENCH_(?P<section>[A-Za-z0-9_]+)\.json$")
+
+
+def section_of(path: str) -> str:
+    m = _BENCH_RE.search(os.path.basename(path))
+    if not m:
+        raise ValueError(f"{path}: expected a BENCH_<section>.json file name")
+    return m.group("section")
+
+
+def load_json(path: str) -> Dict:
+    with open(path) as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict):
+        raise ValueError(f"{path}: expected a JSON object")
+    return data
+
+
+def compare(section: str, current: Dict[str, float],
+            baseline: Dict[str, Dict[str, float]], threshold: float):
+    """Yield (kind, message) pairs; kind is 'warning' | 'note'."""
+    base_rows = baseline.get(section)
+    if base_rows is None:
+        yield ("note", f"{section}: no baseline section; rows recorded only")
+        return
+    for name, us in sorted(current.items()):
+        base = base_rows.get(name)
+        if base is None:
+            yield ("note", f"{section}: new row {name} ({us:.2f} us) "
+                           "not in baseline")
+            continue
+        if base <= 0.0 or us <= 0.0:
+            continue
+        ratio = us / base
+        if ratio > threshold:
+            yield ("warning", f"perf regression {name}: {us:.2f} us vs "
+                              f"baseline {base:.2f} us ({ratio:.2f}x > "
+                              f"{threshold:g}x)")
+    for name in sorted(set(base_rows) - set(current)):
+        yield ("note", f"{section}: baseline row {name} missing from this run")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("files", nargs="+", metavar="BENCH_section.json")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE)
+    parser.add_argument("--threshold", type=float, default=2.0,
+                        help="warn when current > threshold * baseline "
+                             "(default 2.0)")
+    parser.add_argument("--strict", action="store_true",
+                        help="exit 1 on regressions (local use; CI warns only)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="(re)write the baseline from these runs instead "
+                             "of comparing")
+    args = parser.parse_args(argv)
+
+    runs = {section_of(p): load_json(p) for p in args.files}
+
+    if args.write_baseline:
+        merged = dict(sorted(runs.items()))
+        with open(args.baseline, "w") as fh:
+            json.dump(merged, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.baseline} ({sum(len(v) for v in runs.values())} "
+              f"rows, {len(runs)} sections)")
+        return 0
+
+    baseline = load_json(args.baseline)
+    regressions = 0
+    for section, current in sorted(runs.items()):
+        for kind, msg in compare(section, current, baseline, args.threshold):
+            if kind == "warning":
+                regressions += 1
+                # GitHub Actions annotation; plain prefix everywhere else.
+                print(f"::warning title=benchmark regression::{msg}")
+            else:
+                print(msg)
+    total = sum(len(v) for v in runs.values())
+    print(f"checked {total} rows across {len(runs)} section(s): "
+          f"{regressions} regression(s) > {args.threshold:g}x")
+    return 1 if (args.strict and regressions) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

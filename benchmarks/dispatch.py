@@ -87,8 +87,11 @@ def dispatch_paths() -> List[Row]:
     rows.append(("dispatch/route_pallas/us", us_pal, flops / us_pal * 1e-3))
 
     # --- Policy.dot hot path with a warm cache --------------------------------
+    # Pinned to the xla route so the row times the same code path in both legs
+    # of the CI REPRO_DISPATCH matrix (one committed baseline value).
     pol = Policy("ozaki2_int8")
-    us_dot = _timed(lambda: pol.dot(a, b))
+    with dispatch.mode_scope("xla"):
+        us_dot = _timed(lambda: pol.dot(a, b))
     us_lookup = _timed_host(lambda: dispatch.get_plan(k, pol.payload_bits,
                                                       "int8"))
     rows.append(("dispatch/policy_dot_warm/us", us_dot, us_lookup))

@@ -8,6 +8,16 @@ derived column:
                    kernel, computed from the actual operand/result shapes.  The
                    paper's claim is β = 1 for f64/ds output and (8+r)/16-ish for
                    digits mode; this prints the exact numbers.
+  route rows     — xla vs pallas through the dispatch entry points
+                   (``ops.ozaki_spmv_bell`` / ``ops.ozaki_stencil7`` with
+                   ``mode=``); derived = max |pallas - xla|, expected exactly 0
+                   (the routes are bit-identical).
+
+Every row pins its dispatch mode so the perf trajectory measures the same code
+path in both legs of the CI ``REPRO_DISPATCH`` matrix.  The SpMV pallas-route
+row uses a 24-bit-payload plan (r = 7): the interpreted gather graph with the
+default r = 15 plan costs *minutes* of XLA-CPU compile (ROADMAP), which is a
+parity-oracle price the benchmark lane must not pay.
 """
 
 from __future__ import annotations
@@ -71,10 +81,13 @@ def all_kernels() -> List[Row]:
             rows.append((f"kernel_gemv_b{B}/{rep}/beta", us, beta))
 
     # --- 7-point stencil ------------------------------------------------------
+    # mode="pallas" pins the wallclock rows to the fused kernel (the CPU auto
+    # route is now the jnp reference via the dispatch seam).
     u = jnp.asarray(rng.standard_normal((32, 32, 32)))
     c = jnp.asarray(np.array([6.0, -1, -1, -1, -1, -1, -1]))
     for rep in ("f64", "digits", "ds"):
-        usx = _timed(lambda rep=rep: ops.ozaki_stencil7(u, c, out_rep=rep, bz=8))
+        usx = _timed(lambda rep=rep: ops.ozaki_stencil7(u, c, out_rep=rep,
+                                                        bz=8, mode="pallas"))
         plan_s = ozaki2.make_plan(8, margin_bits=4)
         npts = 32 ** 3
         out_bytes = {"f64": 8, "ds": 8, "digits": plan_s.r}[rep] * npts
@@ -89,17 +102,48 @@ def all_kernels() -> List[Row]:
     val = jnp.asarray(val_np)
     x = jnp.asarray(rng.standard_normal(Ns))
     for rep in ("f64", "digits"):
-        # interpret=True pins the row to the Pallas kernel: the CPU default now
-        # reroutes to the jnp reference, which would silently change what this
-        # perf-trajectory row measures (and invalidate the fused beta model).
+        # mode="xla" pins these rows to the bit-identical jnp reference: the
+        # interpreted Pallas SpMV pays a multi-minute XLA-CPU compile at the
+        # default plan, which would hang the smoke lane.  The fused-kernel
+        # machinery is covered by the bounded-plan route rows below (and on
+        # TPU these same entry points measure the Mosaic kernel via auto).
         us = _timed(lambda rep=rep: ops.ozaki_spmv_bell(val, col, x, out_rep=rep,
-                                                        br=256, interpret=True))
+                                                        br=256, mode="xla"))
         plan_v = ozaki2.make_plan(bw, margin_bits=4)
         out_bytes = {"f64": 8, "digits": plan_v.r}[rep] * Ms
         # native bytes: values + colidx + x-gather (cached ~1x) + y
         native = Ms * bw * 8 + Ms * bw * 4 + Ns * 8 + Ms * 8
         emu = Ms * bw * 8 + Ms * bw * 4 + Ns * 8 + out_bytes
         rows.append((f"kernel_spmv/{rep}/beta", us, emu / native))
+
+    # --- dispatch-route comparison (the seam, both sides) ---------------------
+    # derived on both rows of a pair = max |pallas - xla| (expected exactly 0:
+    # the routes are bit-identical); outputs are computed once per route.
+    # stencil: default plan, both routes are cheap on CPU.
+    stencil_out = {}
+    for mode in ("xla", "pallas"):
+        us = _timed(lambda mode=mode: ops.ozaki_stencil7(u, c, bz=8, mode=mode))
+        stencil_out[mode] = (f"kernel_stencil/route_{mode}/us", us,
+                             ops.ozaki_stencil7(u, c, bz=8, mode=mode))
+    diff = float(jnp.max(jnp.abs(stencil_out["pallas"][2]
+                                 - stencil_out["xla"][2])))
+    rows.extend((name, us, diff) for name, us, _ in stencil_out.values())
+
+    # spmv: 24-bit payload (r = 7) bounds the interpreter compile to seconds.
+    plan_r7 = ozaki2.make_plan(8, payload_bits=24, margin_bits=4)
+    Mr, Nr, bwr = 256, 256, 8
+    col_r = jnp.asarray(rng.integers(0, Nr, (Mr, bwr)).astype(np.int32))
+    val_r = jnp.asarray(rng.standard_normal((Mr, bwr)))
+    x_r = jnp.asarray(rng.standard_normal(Nr))
+    spmv_out = {}
+    for mode in ("xla", "pallas"):
+        us = _timed(lambda mode=mode: ops.ozaki_spmv_bell(
+            val_r, col_r, x_r, plan=plan_r7, br=128, mode=mode))
+        spmv_out[mode] = (f"kernel_spmv/route_{mode}/us", us,
+                          ops.ozaki_spmv_bell(val_r, col_r, x_r, plan=plan_r7,
+                                              br=128, mode=mode))
+    diff = float(jnp.max(jnp.abs(spmv_out["pallas"][2] - spmv_out["xla"][2])))
+    rows.extend((name, us, diff) for name, us, _ in spmv_out.values())
 
     # --- padding-ratio -> beta (Appendix D) -----------------------------------
     for rho in (1.0, 2.0, 4.0):

@@ -1,7 +1,12 @@
 """Benchmark harness — one section per paper table + empirical validations.
 
 Prints ``name,us_per_call,derived`` CSV (one row per measured/derived quantity).
-Run: ``PYTHONPATH=src python -m benchmarks.run [--section NAME]``.
+Run: ``PYTHONPATH=src python -m benchmarks.run [--section NAME] [--json [DIR]]``.
+
+``--json`` additionally writes one ``BENCH_<section>.json`` file per section
+(``{row name: us_per_call}``) into DIR (default: the current directory) — the
+machine-readable perf-trajectory artifact CI uploads and feeds to
+``benchmarks.check_regression`` against the committed ``benchmarks/baseline.json``.
 
 x64 is enabled (before JAX initialises) because the emulation benchmarks compare
 against float64 oracles; device count stays 1 (the dry-run owns the 512-device
@@ -9,6 +14,8 @@ configuration, see src/repro/launch/dryrun.py).
 """
 
 import argparse
+import json
+import os
 import sys
 
 import jax
@@ -44,10 +51,29 @@ def _sections():
     }
 
 
+def write_json(section: str, rows, out_dir: str) -> str:
+    """Write BENCH_<section>.json (row name -> us_per_call) and return its path.
+
+    Derived-only rows (us == 0: model projections, structural bounds) are
+    timing-free and excluded — the JSON is the perf trajectory, not the table.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    payload = {name: round(us, 2) for name, us, _ in rows if us > 0.0}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--section", default=None,
                         help="comma-separated section name(s) (default: all)")
+    parser.add_argument("--json", nargs="?", const=".", default=None,
+                        metavar="DIR",
+                        help="also write BENCH_<section>.json (name -> "
+                             "us_per_call) into DIR (default: cwd)")
     args = parser.parse_args()
 
     secs = _sections()
@@ -63,11 +89,15 @@ def main() -> None:
     ok = True
     for name in names:
         try:
-            for row, us, derived in secs[name]():
-                print(f"{row},{us:.2f},{derived:.6g}")
+            rows = list(secs[name]())
         except Exception as e:  # pragma: no cover - surfacing, not hiding
             ok = False
             print(f"{name}/ERROR,0,0  # {type(e).__name__}: {e}", file=sys.stderr)
+            continue
+        for row, us, derived in rows:
+            print(f"{row},{us:.2f},{derived:.6g}")
+        if args.json is not None:
+            write_json(name, rows, args.json)
     if not ok:
         raise SystemExit(1)
 

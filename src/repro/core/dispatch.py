@@ -3,9 +3,10 @@
 The paper's §8 recommendation is that Ozaki-style emulation live *behind* the
 precision-policy interface of the standard libraries, with the register-fused
 kernels as the default execution path.  This module is that seam: every
-emulated matmul in the repo (``Policy.dot``, the HPC solvers, the serving
-engine, the kernel wrappers) resolves its configuration and its execution path
-here instead of hand-rolling both at each call-site.
+emulated multiplication in the repo (``Policy.dot``, the HPC solvers, the
+serving engine, the kernel wrappers, the spectral transforms) resolves its
+configuration and its execution path here instead of hand-rolling both at each
+call-site.
 
 Three concerns, one layer:
 
@@ -15,21 +16,28 @@ Three concerns, one layer:
      ``required_r`` + Garner recomputation disappears from the hot path
      (previously paid on *every* ``Policy.dot`` trace and every VJP re-plan).
 
-  2. **Shape-normalising router** — ``matmul`` pads arbitrary ``(m, k, n)``
-     operands up to MXU-friendly block multiples (sublane 8, lane 128) and
-     dispatches to the fused Pallas ``gemm_hilo`` kernel (interpret-mode on
-     CPU, compiled Mosaic on TPU) when the substrate supports it, falling back
-     to the unfused XLA reference ``ozaki2.emulated_matmul`` otherwise.
-     Zero-padding is exact: padded rows/columns scale with shift 0 and
-     contribute zero residues, so the pallas route is *bit-identical* to the
-     XLA route on the unpadded region.
+  2. **Shape-normalising router** — one entry point per fused-kernel *kind*
+     (``matmul`` covering gemm/gemv, ``spmv`` for Blocked-ELL, ``stencil7``
+     for the 7-point stencil) normalises operands (MXU padding for GEMM:
+     sublane 8, lane 128), routes, and unpads.  The ``pallas`` route is the
+     fused kernel (interpret-mode on CPU, compiled Mosaic on TPU); the
+     ``xla`` route is the unfused bit-identical reference
+     (``ozaki2.emulated_matmul``, ``ozaki_spmv.spmv_bell_ref``,
+     ``ozaki_stencil.stencil7_ref``).  Zero-padding is exact: padded
+     rows/columns scale with shift 0 and contribute zero residues, so the two
+     routes are *bit-identical* on the unpadded region for every kind.
 
   3. **Mode override** — the route is selected by, in priority order: an
      explicit ``mode=`` argument, the ``mode_scope``/``set_mode``
      programmatic override, and the ``REPRO_DISPATCH`` environment variable
-     (``auto | xla | pallas``, default ``auto``).  ``auto`` prefers the fused
-     kernel on TPU backends and the XLA path on CPU (where interpret-mode
-     Pallas is a correctness tool, not a fast path).
+     (``auto | xla | pallas``, default ``auto``).  ``auto`` resolves through
+     the per-kind backend table ``AUTO_ROUTE``: every kind prefers the fused
+     kernel on TPU backends and the reference path on CPU (where
+     interpret-mode Pallas is a correctness tool, not a fast path — for
+     ``spmv_bell`` the interpreted gather graph even costs minutes of XLA
+     compile).  Whether the pallas route runs interpreted is *not* routing:
+     ``pallas_interpret`` decides it here, per backend, and no caller outside
+     this module passes ``interpret=`` for route selection.
 """
 
 from __future__ import annotations
@@ -47,6 +55,22 @@ from repro.core import ozaki2
 
 MODES = ("auto", "xla", "pallas")
 ENV_VAR = "REPRO_DISPATCH"
+
+# Fused-kernel kinds the router understands.  "gemm"/"gemv" share the matmul
+# entry point (split on RHS width); "spmv_bell" and "stencil7" have their own.
+KINDS = ("gemm", "gemv", "spmv_bell", "stencil7")
+
+# Per-kind auto-route defaults by backend family.  One table instead of the
+# old per-wrapper ``_default_interpret()`` logic: the fused kernels are the
+# production route on TPU for every kind; on CPU/GPU the bit-identical
+# reference is the fast path (the Pallas interpreter is a parity oracle —
+# and for spmv_bell its gather graph pays a multi-minute XLA-CPU compile).
+AUTO_ROUTE = {
+    "gemm": {"tpu": "pallas", "default": "xla"},
+    "gemv": {"tpu": "pallas", "default": "xla"},
+    "spmv_bell": {"tpu": "pallas", "default": "xla"},
+    "stencil7": {"tpu": "pallas", "default": "xla"},
+}
 
 # MXU geometry (Pallas TPU tiling constraints): second-minor axis in sublane
 # multiples of 8, minor axis in lane multiples of 128.
@@ -180,22 +204,42 @@ def pad_operands(a: jax.Array, b: jax.Array,
 # Routing
 # ---------------------------------------------------------------------------
 
-def pallas_supported(plan: ozaki2.Plan) -> bool:
+def _validate_kind(kind: str) -> str:
+    if kind not in KINDS:
+        raise ValueError(f"dispatch kind must be one of {KINDS}, got {kind!r}")
+    return kind
+
+
+def pallas_supported(plan: ozaki2.Plan, kind: str = "gemm") -> bool:
     """The fused kernels implement the int8 residue substrate only; the FP8
-    Karatsuba substrate runs through the XLA reference path."""
+    Karatsuba substrate runs through the XLA reference path (every kind)."""
+    _validate_kind(kind)
     return plan.substrate == "int8"
 
 
-def choose_route(plan: ozaki2.Plan, mode: Optional[str] = None) -> str:
-    """Resolve a concrete route ('xla' | 'pallas') for this plan and mode."""
+def choose_route(plan: ozaki2.Plan, kind: str = "gemm",
+                 mode: Optional[str] = None) -> str:
+    """Resolve a concrete route ('xla' | 'pallas') for this plan/kind/mode."""
+    _validate_kind(kind)
     mode = _validate_mode(mode) if mode is not None else get_mode()
-    if mode == "xla" or not pallas_supported(plan):
+    if mode == "xla" or not pallas_supported(plan, kind):
         return "xla"
     if mode == "pallas":
         return "pallas"
-    # auto: the fused path is the production route on TPU; on CPU the Pallas
-    # interpreter is a correctness oracle, not a fast path.
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+    table = AUTO_ROUTE[kind]
+    return table.get(jax.default_backend(), table["default"])
+
+
+def pallas_interpret(kind: str = "gemm") -> bool:
+    """Whether the pallas route runs the kernel interpreter on this backend.
+
+    This is the *execution flavour* of the fused route, not route selection:
+    on TPU the kernels lower through Mosaic, everywhere else they run under
+    the Pallas interpreter.  Callers outside this module never pass
+    ``interpret=`` to pick a path — they pass ``mode=`` and land here.
+    """
+    _validate_kind(kind)
+    return jax.default_backend() != "tpu"
 
 
 def _working_float():
@@ -207,21 +251,28 @@ def _working_float():
 GEMV_MAX_B = 16
 
 
+def _matmul_kind(n: int) -> str:
+    """gemm vs gemv: narrow RHS routes to the fused batched-GEMV kernel."""
+    return "gemv" if n <= GEMV_MAX_B else "gemm"
+
+
 def _pallas_matmul(a: jax.Array, b: jax.Array, plan: ozaki2.Plan) -> jax.Array:
     from repro.kernels import ops  # deferred: kernels import core, not vice versa
 
     m, k = a.shape
     n = b.shape[1]
-    if n <= GEMV_MAX_B:
+    if _matmul_kind(n) == "gemv":
         # Narrow RHS (matvec / small batch): the GEMV kernel keeps B on the MXU
         # minor dim rather than zero-padding it to a 128-wide GEMM tile.
         bm, _, bk = choose_blocks(m, k, n)
         ap = _pad_axis(_pad_axis(a, 0, bm), 1, bk)
         bp = _pad_axis(b, 0, bk)
-        out = ops.ozaki_gemv(ap, bp, plan=plan, bm=bm, bk=bk)
+        out = ops.ozaki_gemv(ap, bp, plan=plan, bm=bm, bk=bk,
+                             interpret=pallas_interpret("gemv"))
         return out[:m]
     ap, bp, (bm, bn, bk) = pad_operands(a, b)
-    out = ops.ozaki_gemm(ap, bp, plan=plan, bm=bm, bn=bn, bk=bk)
+    out = ops.ozaki_gemm(ap, bp, plan=plan, bm=bm, bn=bn, bk=bk,
+                         interpret=pallas_interpret("gemm"))
     return out[:m, :n]
 
 
@@ -237,7 +288,7 @@ def matmul(a: jax.Array, b: jax.Array, plan: Optional[ozaki2.Plan] = None,
     """
     if plan is None:
         plan = get_plan(a.shape[-1], payload_bits, substrate)
-    if choose_route(plan, mode) == "pallas":
+    if choose_route(plan, _matmul_kind(b.shape[1]), mode) == "pallas":
         return _pallas_matmul(a, b, plan)
     return ozaki2.emulated_matmul(a, b, plan, out_dtype=_working_float())
 
@@ -250,3 +301,48 @@ def dot(x: jax.Array, w: jax.Array, plan: Optional[ozaki2.Plan] = None,
     out = matmul(x.reshape((-1, x.shape[-1])), w, plan=plan,
                  payload_bits=payload_bits, substrate=substrate, mode=mode)
     return out.reshape(lead + (w.shape[-1],))
+
+
+def spmv(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
+         plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
+         br: int = 128, mode: Optional[str] = None) -> jax.Array:
+    """Emulated Blocked-ELL SpMV y = A x through the dispatch layer.
+
+    a_val: (M, bw) padded per-row nonzero values, a_col: (M, bw) int32 column
+    indices, x: (N,).  Same contract as ``matmul``: the plan resolves from the
+    process cache (k = bw, stencil/SpMV margin), the route follows
+    ``choose_route(plan, "spmv_bell", mode)``, and the two routes are
+    bit-identical — the fused kernel pads M up to the row-block internally and
+    unpads before returning, with all-zero padded rows contributing nothing.
+    """
+    # Deferred module import (kernels import core, not vice versa); attribute
+    # access at call time keeps the route monkeypatch-able in tests.
+    from repro.kernels import ozaki_spmv as _spmv
+
+    if plan is None:
+        plan = get_plan(a_val.shape[1], margin_bits=4)
+    if choose_route(plan, "spmv_bell", mode) == "pallas":
+        return _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep,
+                               br=br, interpret=pallas_interpret("spmv_bell"))
+    return _spmv.spmv_bell_ref(a_val, a_col, x, plan, out_rep=out_rep)
+
+
+def stencil7(u: jax.Array, c: jax.Array, plan: Optional[ozaki2.Plan] = None,
+             out_rep: str = "f64", bz: int = 8,
+             mode: Optional[str] = None) -> jax.Array:
+    """Emulated 7-point stencil v = S[c] u through the dispatch layer.
+
+    u: (X, Y, Z) grid, c: (7,) coefficients ordered
+    [centre, -x, +x, -y, +y, -z, +z]; boundary points see a zero halo.  The
+    route follows ``choose_route(plan, "stencil7", mode)``: the fused Pallas
+    kernel (z-axis blocked, padded and unpadded internally) vs the
+    bit-identical jnp reference ``ozaki_stencil.stencil7_ref``.
+    """
+    from repro.kernels import ozaki_stencil as _stencil
+
+    if plan is None:
+        plan = get_plan(8, margin_bits=4)
+    if choose_route(plan, "stencil7", mode) == "pallas":
+        return _stencil.stencil7(u, c, plan, out_rep=out_rep, bz=bz,
+                                 interpret=pallas_interpret("stencil7"))
+    return _stencil.stencil7_ref(u, c, plan, out_rep=out_rep)

@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compensated, dispatch, ozaki2
-from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -82,16 +81,20 @@ def cg_solve(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
 
 def cg_solve_bell(a_val: jax.Array, a_col: jax.Array, b: jax.Array,
                   plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
-                  **kw) -> CGResult:
-    """CG with the fused Ozaki-II Blocked-ELL SpMV as the matvec.
+                  mode: Optional[str] = None, **kw) -> CGResult:
+    """CG with the Ozaki-II Blocked-ELL SpMV as the matvec, dispatch-routed.
 
-    The plan resolves once from the dispatch cache (not per iteration).
+    The plan resolves once from the dispatch cache (not per iteration); the
+    SpMV route follows ``mode`` / ``mode_scope`` / ``REPRO_DISPATCH`` like
+    every multiplication behind the seam — the sparse-LA dwarf's §7.1(a)
+    recipe with the emulated kernel as a uniformly-routed drop-in.
     """
     if plan is None:
         plan = dispatch.get_plan(a_val.shape[1], margin_bits=4)
 
     def matvec(x):
-        return ops.ozaki_spmv_bell(a_val, a_col, x, plan=plan, out_rep=out_rep)
+        return dispatch.spmv(a_val, a_col, x, plan=plan, out_rep=out_rep,
+                             mode=mode)
     return cg_solve(matvec, b, **kw)
 
 

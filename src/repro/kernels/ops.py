@@ -1,9 +1,18 @@
 """Jit'd public wrappers for the fused Ozaki-II Pallas kernels.
 
-Each wrapper performs the cheap streaming pre/post work (Phase-1 scaling, hi/lo
-split, padding to block multiples, digit epilogue, exact unscale) and invokes the
-fused kernel.  ``interpret`` defaults to True on CPU (this container); on a TPU
-backend the same code lowers through Mosaic.
+Two tiers of wrapper live here:
+
+  * ``ozaki_gemm`` / ``ozaki_gemv`` — kernel-level wrappers: the cheap
+    streaming pre/post work (Phase-1 scaling, hi/lo split, padding to block
+    multiples, digit epilogue, exact unscale) around one ``pallas_call``.
+    These ARE the pallas route; ``repro.core.dispatch.matmul`` calls them and
+    decides ``interpret`` (Mosaic on TPU, interpreter elsewhere).
+  * ``ozaki_spmv_bell`` / ``ozaki_stencil7`` — routed entry points: thin
+    delegates to ``dispatch.spmv`` / ``dispatch.stencil7``, so
+    ``mode_scope`` / ``REPRO_DISPATCH`` flips them between the fused kernel
+    and the bit-identical jnp reference like every other multiplication in
+    the repo.  Route selection (and the interpret flavour of the pallas
+    route) lives in the dispatch layer only.
 """
 
 from __future__ import annotations
@@ -17,12 +26,6 @@ from repro.core import dispatch, ozaki2, splitting
 from repro.kernels import common
 from repro.kernels import ozaki_gemm as _gemm
 from repro.kernels import ozaki_gemv as _gemv
-from repro.kernels import ozaki_spmv as _spmv
-from repro.kernels import ozaki_stencil as _stencil
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad2(x: jax.Array, bm: int, bn: int) -> jax.Array:
@@ -61,7 +64,7 @@ def ozaki_gemm(a: jax.Array, b: jax.Array, plan: Optional[ozaki2.Plan] = None,
     if plan is None:
         plan = dispatch.get_plan(K)
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = dispatch.pallas_interpret("gemm")
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     f64 = _working_f64()
 
@@ -87,7 +90,7 @@ def ozaki_gemv(a: jax.Array, x: jax.Array, plan: Optional[ozaki2.Plan] = None,
     if plan is None:
         plan = dispatch.get_plan(N)
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = dispatch.pallas_interpret("gemv")
     bm, bk = min(bm, M), min(bk, N)
     f64 = _working_f64()
 
@@ -106,40 +109,31 @@ def ozaki_gemv(a: jax.Array, x: jax.Array, plan: Optional[ozaki2.Plan] = None,
 
 def ozaki_stencil7(u: jax.Array, c: jax.Array,
                    plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
-                   bz: int = 8, interpret: Optional[bool] = None) -> jax.Array:
-    """Fused 7-point 3-D stencil (paper Alg. 2) at FP64 accuracy.
+                   bz: int = 8, mode: Optional[str] = None) -> jax.Array:
+    """7-point 3-D stencil (paper Alg. 2) at FP64 accuracy, dispatch-routed.
 
     u: (X, Y, Z) grid, c: (7,) coefficients ordered
     [centre, -x, +x, -y, +y, -z, +z].  Boundary points use zero halo.
+    ``mode`` (or the ambient ``mode_scope`` / ``REPRO_DISPATCH``) selects the
+    fused Pallas kernel or the bit-identical jnp reference.
     """
-    if plan is None:
-        plan = dispatch.get_plan(8, margin_bits=4)
-    if interpret is None:
-        interpret = _default_interpret()
-    return _stencil.stencil7(u, c, plan, out_rep=out_rep, bz=bz,
-                             interpret=interpret)
+    return dispatch.stencil7(u, c, plan=plan, out_rep=out_rep, bz=bz, mode=mode)
 
 
 def ozaki_spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
                     plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
-                    br: int = 128, interpret: Optional[bool] = None) -> jax.Array:
-    """Blocked-ELL SpMV y = A x (paper Alg. 3).
+                    br: int = 128, mode: Optional[str] = None) -> jax.Array:
+    """Blocked-ELL SpMV y = A x (paper Alg. 3), dispatch-routed.
 
     a_val: (M, bw) padded per-row nonzero values; a_col: (M, bw) int32 column
     indices (structural-zero slots must point at a valid column, value 0.0).
 
-    Routing: on CPU backends the default (``interpret=None``) takes the
-    bit-identical unfused jnp reference — interpret-mode ``pallas_call`` hands
-    XLA a gather-heavy graph with a multi-minute compile, which is a
-    correctness oracle, not a path anyone should pay by default.  Pass
-    ``interpret=True`` to force the Pallas interpreter (parity tests); on TPU
-    the fused Mosaic kernel is the default.
+    ``mode`` selects the route like every dispatch-seam multiplication.  On
+    CPU backends ``auto`` takes the bit-identical jnp reference: the
+    interpreted ``pallas_call`` hands XLA a gather-heavy graph with a
+    multi-minute compile — a correctness oracle (``mode="pallas"``, used by
+    the slow-lane parity test), not a path anyone should pay by default.  On
+    TPU ``auto`` is the fused Mosaic kernel.
     """
-    if plan is None:
-        plan = dispatch.get_plan(a_val.shape[1], margin_bits=4)
-    if interpret is None:
-        if _default_interpret():
-            return _spmv.spmv_bell_ref(a_val, a_col, x, plan, out_rep=out_rep)
-        interpret = False
-    return _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep, br=br,
-                           interpret=interpret)
+    return dispatch.spmv(a_val, a_col, x, plan=plan, out_rep=out_rep, br=br,
+                         mode=mode)

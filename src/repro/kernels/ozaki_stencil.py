@@ -39,6 +39,14 @@ def _global_scale_to_int(x: jax.Array, payload_bits: int):
     return jnp.round(scaled), shift
 
 
+def _roll_mask(arr: jax.Array, ax: int, d: int) -> jax.Array:
+    """Shift by one along ``ax`` with a zero fill at the exposed boundary."""
+    rolled = jnp.roll(arr, d, axis=ax)
+    idx = [slice(None)] * 3
+    idx[ax] = 0 if d == 1 else -1
+    return rolled.at[tuple(idx)].set(0)
+
+
 def _stencil_kernel(c_res_ref, u_hi_p, u_lo_p, u_hi_c, u_lo_c, u_hi_n, u_lo_n,
                     out_ref, *, plan: ozaki2.Plan, out_rep: str, z_steps: int):
     zidx = pl.program_id(0)
@@ -46,12 +54,6 @@ def _stencil_kernel(c_res_ref, u_hi_p, u_lo_p, u_hi_c, u_lo_c, u_hi_n, u_lo_n,
 
     def neighborhood(cur, prev, nxt):
         """Stack the 7-point neighbourhood: [centre, -x, +x, -y, +y, -z, +z]."""
-        def roll_mask(arr, ax, d):
-            rolled = jnp.roll(arr, d, axis=ax)
-            idx = [slice(None)] * 3
-            idx[ax] = 0 if d == 1 else -1
-            return rolled.at[tuple(idx)].set(0)
-
         zm = jnp.concatenate([prev[:, :, -1:], cur[:, :, :-1]], axis=2)
         zm = jnp.where(zidx == 0,
                        zm.at[:, :, 0].set(0), zm)  # global -z boundary
@@ -60,8 +62,8 @@ def _stencil_kernel(c_res_ref, u_hi_p, u_lo_p, u_hi_c, u_lo_c, u_hi_n, u_lo_n,
                        zp.at[:, :, -1].set(0), zp)  # global +z boundary
         return jnp.stack([
             cur,
-            roll_mask(cur, 0, 1), roll_mask(cur, 0, -1),
-            roll_mask(cur, 1, 1), roll_mask(cur, 1, -1),
+            _roll_mask(cur, 0, 1), _roll_mask(cur, 0, -1),
+            _roll_mask(cur, 1, 1), _roll_mask(cur, 1, -1),
             zm, zp,
         ], axis=0)  # (7, X, Y, bz)
 
@@ -155,4 +157,55 @@ def stencil7(u: jax.Array, c: jax.Array, plan: ozaki2.Plan,
     else:
         v = common.digits_to_f64(common.unstack_digits(raw), plan,
                                  out_dtype=f64)[:, :, :Z]
+    return jnp.ldexp(v, jnp.broadcast_to(-(su + sc), v.shape))
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "out_rep"))
+def stencil7_ref(u: jax.Array, c: jax.Array, plan: ozaki2.Plan,
+                 out_rep: str = "f64") -> jax.Array:
+    """Unfused jnp reference of the fused stencil kernel, bit-identical.
+
+    Same Phase-1 global scaling, hi/lo split, zero-halo neighbourhood
+    (``_roll_mask`` is shared with the kernel), residues, per-modulus 7-term
+    contraction, Garner digits, and reconstruction epilogue as ``stencil7`` —
+    every integer step is exact and point-local, so the result matches the
+    Pallas path bit-for-bit regardless of z-blocking.  This is the ``xla``
+    route of ``repro.core.dispatch.stencil7``.
+    """
+    f64 = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    ui, su = _global_scale_to_int(u.astype(f64), plan.payload_bits)
+    ci, sc = _global_scale_to_int(c.astype(f64), plan.payload_bits)
+    u_hi, u_lo = splitting.split_hi_lo(ui)
+    c_hi, c_lo = splitting.split_hi_lo(ci)
+    c_res = common.residues_int32(c_hi, c_lo, plan.moduli)
+
+    def neighborhood(arr):
+        # Global-array version of the kernel's halo'd stack: the z neighbours
+        # come from jnp.roll with the same boundary masking the kernel applies
+        # to its first/last slab.
+        return jnp.stack([
+            arr,
+            _roll_mask(arr, 0, 1), _roll_mask(arr, 0, -1),
+            _roll_mask(arr, 1, 1), _roll_mask(arr, 1, -1),
+            _roll_mask(arr, 2, 1), _roll_mask(arr, 2, -1),
+        ], axis=0)  # (7, X, Y, Z)
+
+    nb_hi = neighborhood(u_hi).reshape(7, -1)
+    nb_lo = neighborhood(u_lo).reshape(7, -1)
+    u_res = common.residues_int32(nb_hi, nb_lo, plan.moduli)
+
+    accs = []
+    for i, m in enumerate(plan.moduli):
+        # (1, 7) x (7, npts) int32 contraction: |sum| <= 7 * 128 * 128, exact.
+        part = jnp.tensordot(c_res[i].reshape(1, 7), u_res[i], axes=(1, 0))
+        accs.append(common.balanced_mod(part.reshape(u.shape), m))
+
+    digits = common.garner_digits(accs, plan)
+    if out_rep in ("f64", "digits"):
+        v = common.digits_to_f64(digits, plan, out_dtype=f64)
+    elif out_rep == "ds":
+        hi, lo = common.digits_to_ds(digits, plan)
+        v = hi.astype(f64) + lo.astype(f64)
+    else:
+        raise ValueError(f"out_rep must be one of {common.OUT_REPS}")
     return jnp.ldexp(v, jnp.broadcast_to(-(su + sc), v.shape))

@@ -1,0 +1,106 @@
+"""Perf-trajectory tooling: BENCH_*.json writer + baseline comparison.
+
+``benchmarks`` is not an installed package; the repo root joins sys.path so
+the CI lane (which runs pytest from the repo root anyway) and local runs both
+resolve it.  ``check_regression`` is dependency-free by design — these tests
+never touch jax.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from benchmarks import check_regression  # noqa: E402
+
+
+def _write(path: Path, payload) -> str:
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+def test_section_of_parses_and_rejects():
+    assert check_regression.section_of("BENCH_dispatch.json") == "dispatch"
+    assert check_regression.section_of("/tmp/x/BENCH_table1.json") == "table1"
+    with pytest.raises(ValueError):
+        check_regression.section_of("benchmark-smoke.csv")
+
+
+def test_compare_flags_only_regressions_beyond_threshold():
+    baseline = {"kernels": {"a/us": 100.0, "b/us": 100.0, "gone/us": 5.0}}
+    current = {"a/us": 150.0, "b/us": 201.0, "new/us": 7.0}
+    out = list(check_regression.compare("kernels", current, baseline, 2.0))
+    warnings = [m for k, m in out if k == "warning"]
+    notes = [m for k, m in out if k == "note"]
+    assert len(warnings) == 1 and "b/us" in warnings[0]      # 2.01x > 2x
+    assert any("new/us" in n for n in notes)                 # new row noted
+    assert any("gone/us" in n for n in notes)                # dropped row noted
+
+
+def test_compare_unknown_section_is_note_not_warning():
+    out = list(check_regression.compare("mystery", {"x/us": 1.0}, {}, 2.0))
+    assert [k for k, _ in out] == ["note"]
+
+
+def test_main_warns_but_exits_zero(tmp_path, capsys):
+    """The CI contract: >2x regressions annotate, never fail the build."""
+    base = _write(tmp_path / "baseline.json", {"dispatch": {"r/us": 10.0}})
+    cur = _write(tmp_path / "BENCH_dispatch.json", {"r/us": 25.0})
+    rc = check_regression.main([cur, "--baseline", base])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "::warning" in out and "2.50x" in out
+    # --strict flips the same comparison to a failure (local use).
+    assert check_regression.main([cur, "--baseline", base, "--strict"]) == 1
+
+
+def test_main_write_baseline_round_trips(tmp_path):
+    cur = _write(tmp_path / "BENCH_spectral.json", {"fft/us": 12.5})
+    base = tmp_path / "baseline.json"
+    rc = check_regression.main([cur, "--baseline", str(base),
+                                "--write-baseline"])
+    assert rc == 0
+    assert json.loads(base.read_text()) == {"spectral": {"fft/us": 12.5}}
+    # a fresh run against the just-written baseline is clean even with --strict
+    assert check_regression.main([cur, "--baseline", str(base),
+                                  "--strict"]) == 0
+
+
+def test_committed_baseline_covers_ci_smoke_sections():
+    """benchmarks/baseline.json (the committed trajectory anchor) must have
+    rows for every section the CI fast lane runs with --json."""
+    baseline = json.loads((REPO_ROOT / "benchmarks" / "baseline.json").read_text())
+    for section in ("table1", "dispatch", "spectral", "kernels"):
+        assert section in baseline, f"baseline missing section {section}"
+    # table1 is derived-only (model rows, us == 0) and legitimately empty;
+    # the empirical sections must carry timing rows.
+    for section in ("dispatch", "spectral", "kernels"):
+        assert baseline[section], f"baseline section {section} has no rows"
+    # route rows of the new seam kinds are part of the trajectory
+    assert "kernel_spmv/route_pallas/us" in baseline["kernels"]
+    assert "kernel_stencil/route_pallas/us" in baseline["kernels"]
+
+
+def test_run_json_writer_skips_derived_only_rows(tmp_path):
+    """benchmarks.run.write_json: name -> us map, derived-only rows dropped.
+
+    Imported in a subprocess: importing benchmarks.run flips jax x64 config,
+    which must not leak into this pytest process.
+    """
+    code = (
+        "import json\n"
+        "from benchmarks.run import write_json\n"
+        "rows = [('k/f64/beta', 12.34, 1.0), ('k/model', 0.0, 3.0)]\n"
+        f"p = write_json('kernels', rows, {str(tmp_path)!r})\n"
+        "print(json.dumps(json.load(open(p))))\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], cwd=REPO_ROOT,
+                         capture_output=True, text=True, check=True)
+    assert json.loads(out.stdout.strip()) == {"k/f64/beta": 12.34}
+    assert (tmp_path / "BENCH_kernels.json").exists()

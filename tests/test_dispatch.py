@@ -85,13 +85,37 @@ def test_mode_scope_overrides_env_and_restores(monkeypatch):
 def test_choose_route():
     int8 = dispatch.get_plan(64, substrate="int8")
     fp8 = dispatch.get_plan(64, substrate="fp8")
-    assert dispatch.choose_route(int8, "xla") == "xla"
-    assert dispatch.choose_route(int8, "pallas") == "pallas"
+    assert dispatch.choose_route(int8, mode="xla") == "xla"
+    assert dispatch.choose_route(int8, mode="pallas") == "pallas"
     # fp8 has no fused kernel: always the XLA reference path
-    assert dispatch.choose_route(fp8, "pallas") == "xla"
+    assert dispatch.choose_route(fp8, mode="pallas") == "xla"
     # auto on this CPU container avoids interpret-mode Pallas
     if jax.default_backend() != "tpu":
-        assert dispatch.choose_route(int8, "auto") == "xla"
+        assert dispatch.choose_route(int8, mode="auto") == "xla"
+
+
+def test_choose_route_is_kind_aware():
+    """Every fused-kernel kind resolves through the same seam: explicit modes
+    win, fp8 falls back, and auto follows the per-kind backend table."""
+    int8 = dispatch.get_plan(64, substrate="int8")
+    fp8 = dispatch.get_plan(64, substrate="fp8")
+    for kind in dispatch.KINDS:
+        assert dispatch.choose_route(int8, kind, "xla") == "xla"
+        assert dispatch.choose_route(int8, kind, "pallas") == "pallas"
+        assert dispatch.choose_route(fp8, kind, "pallas") == "xla"
+        table = dispatch.AUTO_ROUTE[kind]
+        want = table.get(jax.default_backend(), table["default"])
+        assert dispatch.choose_route(int8, kind, "auto") == want
+    with pytest.raises(ValueError):
+        dispatch.choose_route(int8, "conv3x3")
+    with pytest.raises(ValueError):
+        dispatch.pallas_interpret("conv3x3")
+
+
+def test_matmul_kind_split_matches_gemv_threshold():
+    assert dispatch._matmul_kind(1) == "gemv"
+    assert dispatch._matmul_kind(dispatch.GEMV_MAX_B) == "gemv"
+    assert dispatch._matmul_kind(dispatch.GEMV_MAX_B + 1) == "gemm"
 
 
 # ---------------------------------------------------------------------------
@@ -190,3 +214,122 @@ def test_cg_dense_dispatch_converges():
     assert res.converged
     np.testing.assert_allclose(np.asarray(dense) @ np.asarray(res.x),
                                np.asarray(b), atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# SpMV / stencil on the seam (mode flipping end-to-end)
+# ---------------------------------------------------------------------------
+
+def _spy_spmv_routes(monkeypatch):
+    """Replace both SpMV routes with recorders (the pallas interpreter costs
+    minutes of XLA-CPU compile, so the spy must intercept, not wrap)."""
+    from repro.kernels import ozaki_spmv
+
+    calls = []
+    real_ref = ozaki_spmv.spmv_bell_ref
+
+    def ref_spy(*a, **kw):
+        calls.append("xla")
+        return real_ref(*a, **kw)
+
+    def pallas_spy(a_val, a_col, x, plan, out_rep="f64", br=128,
+                   interpret=True):
+        calls.append("pallas")
+        assert interpret == dispatch.pallas_interpret("spmv_bell")
+        return real_ref(a_val, a_col, x, plan, out_rep=out_rep)
+
+    monkeypatch.setattr(ozaki_spmv, "spmv_bell_ref", ref_spy)
+    monkeypatch.setattr(ozaki_spmv, "spmv_bell", pallas_spy)
+    return calls
+
+
+def test_mode_scope_flips_spmv_route(monkeypatch):
+    """mode_scope / REPRO_DISPATCH select the route of ozaki_spmv_bell the
+    same way they do for GEMM — no caller passes interpret= anymore."""
+    from repro.kernels import ops
+
+    calls = _spy_spmv_routes(monkeypatch)
+    val = jnp.asarray(RNG.standard_normal((16, 4)))
+    col = jnp.asarray(RNG.integers(0, 24, (16, 4)).astype(np.int32))
+    x = jnp.asarray(RNG.standard_normal(24))
+
+    with dispatch.mode_scope("xla"):
+        ops.ozaki_spmv_bell(val, col, x)
+    with dispatch.mode_scope("pallas"):
+        ops.ozaki_spmv_bell(val, col, x)
+    monkeypatch.setenv(dispatch.ENV_VAR, "pallas")
+    ops.ozaki_spmv_bell(val, col, x)
+    assert calls == ["xla", "pallas", "pallas"]
+
+
+def test_mode_scope_flips_stencil_route(monkeypatch):
+    from repro.kernels import ops, ozaki_stencil
+
+    calls = []
+    real_ref = ozaki_stencil.stencil7_ref
+
+    def ref_spy(*a, **kw):
+        calls.append("xla")
+        return real_ref(*a, **kw)
+
+    def pallas_spy(u, c, plan, out_rep="f64", bz=8, interpret=True):
+        calls.append("pallas")
+        assert interpret == dispatch.pallas_interpret("stencil7")
+        return real_ref(u, c, plan, out_rep=out_rep)
+
+    monkeypatch.setattr(ozaki_stencil, "stencil7_ref", ref_spy)
+    monkeypatch.setattr(ozaki_stencil, "stencil7", pallas_spy)
+
+    u = jnp.asarray(RNG.standard_normal((4, 4, 4)))
+    c = jnp.asarray(np.array([6.0, -1, -1, -1, -1, -1, -1]))
+    with dispatch.mode_scope("xla"):
+        ops.ozaki_stencil7(u, c)
+    with dispatch.mode_scope("pallas"):
+        ops.ozaki_stencil7(u, c)
+    monkeypatch.setenv(dispatch.ENV_VAR, "xla")
+    ops.ozaki_stencil7(u, c)
+    assert calls == ["xla", "pallas", "xla"]
+
+
+def test_cg_solve_bell_rides_the_seam(monkeypatch):
+    """The sparse-CG matvec goes through dispatch.spmv: mode_scope flips it."""
+    from repro.hpc import spmv_formats
+    from repro.hpc.cg import cg_solve_bell
+
+    calls = _spy_spmv_routes(monkeypatch)
+    dense = spmv_formats.laplacian_1d(12)
+    val, col = spmv_formats.to_blocked_ell(dense, bw=4)
+    b = jnp.asarray(RNG.standard_normal(12))
+    with dispatch.mode_scope("pallas"):
+        res = cg_solve_bell(jnp.asarray(val), jnp.asarray(col), b, tol=1e-10)
+    assert res.converged
+    assert calls and set(calls) == {"pallas"}
+
+
+def test_stencil_routes_bit_identical():
+    """xla vs pallas through dispatch.stencil7 — the cross-route parity the
+    GEMM paths already pin, now for the structured-grid kind (all reps)."""
+    u = jnp.asarray(RNG.standard_normal((10, 9, 11)))
+    c = jnp.asarray(RNG.standard_normal(7))
+    for rep in ("f64", "digits", "ds"):
+        v_xla = np.asarray(dispatch.stencil7(u, c, out_rep=rep, mode="xla"))
+        v_pal = np.asarray(dispatch.stencil7(u, c, out_rep=rep, bz=4,
+                                             mode="pallas"))
+        np.testing.assert_array_equal(v_xla, v_pal)
+
+
+def test_spmv_routes_bit_identical_small_plan():
+    """xla vs pallas through dispatch.spmv with a 24-bit-payload plan (r = 7):
+    small enough for the interpreted gather graph to compile in seconds, so
+    the fast lane pins SpMV cross-route parity too (a second r = 7 geometry —
+    ragged M, both reps, via the ops entry point — runs in the slow lane:
+    test_kernels.py; the default r = 15 plan is uncoverable on CPU, its
+    interpreter compile exceeds 10 minutes regardless of problem size)."""
+    plan = ozaki2.make_plan(4, payload_bits=24, margin_bits=4)
+    val = jnp.asarray(RNG.standard_normal((24, 4)))
+    col = jnp.asarray(RNG.integers(0, 32, (24, 4)).astype(np.int32))
+    x = jnp.asarray(RNG.standard_normal(32))
+    y_xla = np.asarray(dispatch.spmv(val, col, x, plan=plan, mode="xla"))
+    y_pal = np.asarray(dispatch.spmv(val, col, x, plan=plan, br=8,
+                                     mode="pallas"))
+    np.testing.assert_array_equal(y_xla, y_pal)

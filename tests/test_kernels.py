@@ -148,9 +148,12 @@ def _random_bell(m, n, bw, zero_frac=0.2):
 @pytest.mark.parametrize("mnbw", [(50, 64, 8), (128, 32, 16), (17, 100, 4)])
 @pytest.mark.parametrize("out_rep", ["f64", "digits"])
 def test_spmv_accuracy_sweep(mnbw, out_rep):
+    # mode="xla" pins the arithmetic to the bit-identical reference route:
+    # accuracy is route-independent, and under the CI REPRO_DISPATCH=pallas
+    # leg the default-plan interpreter would pay minutes of XLA-CPU compile.
     m, n, bw = mnbw
     val, col, x = _random_bell(m, n, bw)
-    y = ops.ozaki_spmv_bell(val, col, x, out_rep=out_rep, br=16)
+    y = ops.ozaki_spmv_bell(val, col, x, out_rep=out_rep, br=16, mode="xla")
     want = np.asarray(ref.spmv_bell_f64(val, col, x))
     denom = (np.abs(np.asarray(val)).sum(-1) * np.max(np.abs(np.asarray(x)))
              + 1e-300)
@@ -170,23 +173,32 @@ def test_spmv_laplacian_1d():
             col[i, s], val[i, s] = j, v
     x = RNG.standard_normal(n)
     y = np.asarray(ops.ozaki_spmv_bell(jnp.asarray(val), jnp.asarray(col),
-                                       jnp.asarray(x), br=32))
+                                       jnp.asarray(x), br=32, mode="xla"))
     np.testing.assert_allclose(y, dense @ x, rtol=0, atol=4 * U64 * 4 * np.abs(x).max())
 
 
-@pytest.mark.slow  # interpret-mode SpMV: multi-minute XLA compile on CPU
-def test_spmv_ref_fallback_bit_identical_to_pallas_interpreter():
-    """The jnp reference path (the CPU default) matches the Pallas kernel
-    bit-for-bit: same scaling, residues, contraction, and Garner digits.
+@pytest.mark.slow  # interpret-mode SpMV via pallas route: XLA-CPU compile cost
+def test_spmv_routes_bit_identical_pallas_interpreter():
+    """The xla route (jnp reference, the CPU default) matches the pallas
+    route bit-for-bit through the dispatch seam: same scaling, residues,
+    contraction, and Garner digits — routing by ``mode=``, never
+    ``interpret=``.
 
-    A 24-bit-payload plan (r = 7) keeps the in-kernel Garner graph small
-    enough for the interpreter to compile in minutes, not tens of minutes —
-    bit-identity is plan-independent, so one plan pins the whole path.
+    A 24-bit-payload plan (r = 7) keeps the interpreted Garner graph
+    compileable in seconds; the default r = 15 plan's interpreted gather
+    graph costs 10+ minutes of XLA-CPU compile (ROADMAP) regardless of
+    problem size, so NO CPU lane covers it — on-TPU runs of the same tests
+    exercise the compiled Mosaic kernel at the default plan.  Bit-identity is
+    plan-independent (the decompose prologue is shared code and every integer
+    step is exact), so this plan pins the whole path; ragged M exercises the
+    row-padding of the fused kernel.
     """
     from repro.core import ozaki2
     plan = ozaki2.make_plan(4, payload_bits=24)
-    val, col, x = _random_bell(24, 32, 4)
-    y_ref = np.asarray(ops.ozaki_spmv_bell(val, col, x, plan=plan))  # reference
-    y_pal = np.asarray(ops.ozaki_spmv_bell(val, col, x, plan=plan, br=8,
-                                           interpret=True))          # Pallas
-    np.testing.assert_array_equal(y_ref, y_pal)
+    val, col, x = _random_bell(27, 32, 4)    # 27 % br != 0: padding path
+    for rep in ("f64", "digits"):
+        y_ref = np.asarray(ops.ozaki_spmv_bell(val, col, x, plan=plan,
+                                               out_rep=rep, mode="xla"))
+        y_pal = np.asarray(ops.ozaki_spmv_bell(val, col, x, plan=plan, br=8,
+                                               out_rep=rep, mode="pallas"))
+        np.testing.assert_array_equal(y_ref, y_pal)

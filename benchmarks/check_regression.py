@@ -17,8 +17,13 @@ unless the inputs themselves are unusable (missing/corrupt files) or
 ``--strict`` is given, which turns regressions into a non-zero exit for local
 use.
 
-``--write-baseline`` regenerates the baseline file from the given runs instead
-of comparing (used to seed/refresh ``benchmarks/baseline.json``).
+Rows or sections *absent from the baseline* (the expected skew whenever a new
+benchmark section lands) print ``::notice::`` annotations — informational,
+never a warning, never a crash.
+
+``--write-baseline`` refreshes the baseline from the given runs instead of
+comparing; it merges section-wise, so a partial ``--section`` run updates only
+its own sections and keeps the rest of the committed baseline.
 
 Deliberately dependency-free (no jax import): CI runs it in seconds.
 """
@@ -53,16 +58,24 @@ def load_json(path: str) -> Dict:
 
 def compare(section: str, current: Dict[str, float],
             baseline: Dict[str, Dict[str, float]], threshold: float):
-    """Yield (kind, message) pairs; kind is 'warning' | 'note'."""
+    """Yield (kind, message) pairs; kind is 'warning' | 'notice'.
+
+    Rows (or whole sections) absent from the baseline are *expected* skew —
+    every new benchmark section hits this on its first CI run — so they are
+    notices, never warnings, and never a crash.  Refresh the baseline with
+    ``--write-baseline`` once the new rows are intentional.
+    """
     base_rows = baseline.get(section)
     if base_rows is None:
-        yield ("note", f"{section}: no baseline section; rows recorded only")
+        yield ("notice", f"{section}: no baseline section; "
+                         f"{len(current)} row(s) recorded only — refresh with "
+                         "--write-baseline")
         return
     for name, us in sorted(current.items()):
         base = base_rows.get(name)
         if base is None:
-            yield ("note", f"{section}: new row {name} ({us:.2f} us) "
-                           "not in baseline")
+            yield ("notice", f"{section}: new row {name} ({us:.2f} us) "
+                             "not in baseline")
             continue
         if base <= 0.0 or us <= 0.0:
             continue
@@ -72,7 +85,8 @@ def compare(section: str, current: Dict[str, float],
                               f"baseline {base:.2f} us ({ratio:.2f}x > "
                               f"{threshold:g}x)")
     for name in sorted(set(base_rows) - set(current)):
-        yield ("note", f"{section}: baseline row {name} missing from this run")
+        yield ("notice",
+               f"{section}: baseline row {name} missing from this run")
 
 
 def main(argv=None) -> int:
@@ -92,12 +106,19 @@ def main(argv=None) -> int:
     runs = {section_of(p): load_json(p) for p in args.files}
 
     if args.write_baseline:
-        merged = dict(sorted(runs.items()))
+        # Merge-aware: replace only the sections present in this run, keep
+        # the rest of the committed baseline (a partial --section run must
+        # not silently drop the other sections' history).
+        merged: Dict[str, Dict[str, float]] = {}
+        if os.path.exists(args.baseline):
+            merged.update(load_json(args.baseline))
+        merged.update(runs)
         with open(args.baseline, "w") as fh:
-            json.dump(merged, fh, indent=2, sort_keys=True)
+            json.dump(dict(sorted(merged.items())), fh, indent=2,
+                      sort_keys=True)
             fh.write("\n")
-        print(f"wrote {args.baseline} ({sum(len(v) for v in runs.values())} "
-              f"rows, {len(runs)} sections)")
+        print(f"wrote {args.baseline}: {len(runs)} section(s) refreshed, "
+              f"{len(merged)} total")
         return 0
 
     baseline = load_json(args.baseline)
@@ -109,7 +130,7 @@ def main(argv=None) -> int:
                 # GitHub Actions annotation; plain prefix everywhere else.
                 print(f"::warning title=benchmark regression::{msg}")
             else:
-                print(msg)
+                print(f"::notice title=benchmark skew::{msg}")
     total = sum(len(v) for v in runs.values())
     print(f"checked {total} rows across {len(runs)} section(s): "
           f"{regressions} regression(s) > {args.threshold:g}x")

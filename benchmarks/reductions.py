@@ -1,0 +1,123 @@
+"""Blocked-EFT reduction benchmarks: the §7.1(a) BLAS-1 fast path.
+
+CSV rows (name,us_per_call,derived):
+  reductions/dot_blocked_n{4096,65536}/us — jitted blocked Dot2 in f32
+                                            (derived = plain-f32 error /
+                                            compensated-f32 error vs the f64
+                                            oracle — the accuracy win);
+  reductions/dot_scan_n4096/us            — the retained element-wise scan
+                                            reference (derived = scan_us /
+                                            blocked_us, the blocking speedup;
+                                            the acceptance floor is 10x);
+  reductions/dot_plain_n4096/us           — un-compensated jnp.dot (derived =
+                                            |blocked - scan| result delta,
+                                            expected 0: same math);
+  reductions/sum_blocked_n4096/us         — blocked Neumaier sum (derived =
+                                            plain/compensated error ratio vs
+                                            math.fsum);
+  reductions/norm_n4096/us                — FTZ-safe compensated 2-norm
+                                            (derived = rel err vs the f64
+                                            numpy oracle);
+  reductions/cg48_xla/us                  — dense emulated CG, XLA route:
+  reductions/cg48_pallas/us                 reductions composed with the
+                                            dispatch seam (derived = iteration
+                                            count; the routes must agree).
+
+On this CPU container the pallas CG row runs the kernel interpreter — a
+machinery/parity check, not a perf claim (same caveat as the kernels section).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compensated
+from repro.hpc import cg
+
+Row = Tuple[str, float, float]
+
+
+def _timed(fn, reps: int = 5) -> Tuple[float, object]:
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def _dot_rows(rng) -> List[Row]:
+    rows: List[Row] = []
+    for n in (4096, 65536):
+        a = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        exact = float(np.dot(np.asarray(a, np.float64),
+                             np.asarray(b, np.float64)))
+        us_blk, blk = _timed(lambda a=a, b=b: compensated.compensated_dot(a, b))
+        plain_err = abs(float(jnp.dot(a, b)) - exact)
+        comp_err = abs(float(blk) - exact)
+        rows.append((f"reductions/dot_blocked_n{n}/us", us_blk,
+                     plain_err / max(comp_err, 1e-30)))
+        if n == 4096:
+            us_scan, scan = _timed(
+                lambda a=a, b=b: compensated.compensated_dot_scan(a, b), reps=1)
+            rows.append(("reductions/dot_scan_n4096/us", us_scan,
+                         us_scan / max(us_blk, 1e-9)))
+            us_plain, _ = _timed(lambda a=a, b=b: jnp.dot(a, b))
+            rows.append(("reductions/dot_plain_n4096/us", us_plain,
+                         abs(float(blk) - float(scan))))
+    return rows
+
+
+def _sum_norm_rows(rng) -> List[Row]:
+    # Ill-conditioned summands so the compensation is load-bearing.
+    x = np.asarray(rng.standard_normal(4096) * 10.0 ** rng.integers(
+        0, 8, 4096), np.float32)
+    xj = jnp.asarray(x)
+    exact = math.fsum(np.asarray(x, np.float64).tolist())
+    us, comp = _timed(lambda: compensated.neumaier_sum(xj))
+    plain_err = abs(float(jnp.sum(xj)) - exact)
+    comp_err = abs(float(comp) - exact)
+    rows = [("reductions/sum_blocked_n4096/us", us,
+             plain_err / max(comp_err, 1e-30))]
+
+    v = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+    ref = np.linalg.norm(np.asarray(v, np.float64))
+    us, nrm = _timed(lambda: compensated.compensated_norm(v))
+    rows.append(("reductions/norm_n4096/us", us,
+                 abs(float(nrm) - ref) / ref))
+    return rows
+
+
+def _cg_rows(rng) -> List[Row]:
+    n = 48
+    m = rng.standard_normal((n, n))
+    a = jnp.asarray(m @ m.T + n * np.eye(n))
+    b = jnp.asarray(rng.standard_normal(n))
+    rows: List[Row] = []
+    results = {}
+    for mode in ("xla", "pallas"):
+        us, _ = _timed(lambda mode=mode: cg.cg_solve_dense(
+            a, b, mode=mode, tol=1e-10, maxiter=2 * n,
+            record_plain=False).x, reps=1)
+        res = cg.cg_solve_dense(a, b, mode=mode, tol=1e-10, maxiter=2 * n,
+                                record_plain=False)
+        results[mode] = res
+        rows.append((f"reductions/cg{n}_{mode}/us", us, float(res.iters)))
+    # Route parity: the dispatch routes are bit-identical, so the composed
+    # solves must agree exactly — surfaced in CSV output, asserted in tests.
+    delta = float(jnp.max(jnp.abs(results["xla"].x - results["pallas"].x)))
+    rows.append((f"reductions/cg{n}_route_delta", 0.0, delta))
+    return rows
+
+
+def reductions_section() -> List[Row]:
+    rng = np.random.default_rng(0)
+    return _dot_rows(rng) + _sum_norm_rows(rng) + _cg_rows(rng)

@@ -47,6 +47,7 @@ def _sections():
         # An import failure here surfaces as the section's ERROR row (exit 1)
         # rather than the section silently vanishing from the registry.
         "kernels": _section("kernels", "all_kernels"),
+        "reductions": _section("reductions", "reductions_section"),
         "models": _section("models", "smoke_step_timings"),
     }
 

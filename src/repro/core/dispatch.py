@@ -38,15 +38,29 @@ Three concerns, one layer:
      compile).  Whether the pallas route runs interpreted is *not* routing:
      ``pallas_interpret`` decides it here, per backend, and no caller outside
      this module passes ``interpret=`` for route selection.
+
+  4. **Autotuning table** — ``get_tuning(kind, shape)`` resolves block/tile
+     parameters per (kind, shape-class), keyed like the plan cache.  The
+     shape-class buckets each dimension to the next power of two, so one
+     measured entry covers a band of problem sizes.  Kinds are the fused
+     kernel kinds plus ``reduce`` (the blocked-EFT compensated reductions in
+     ``repro.core.compensated``, which take their block size from here).  The
+     committed ``TUNE_TABLE`` seeds measured defaults; the ``REPRO_TUNE``
+     environment variable (inline JSON or a path to a JSON file, shaped
+     ``{kind: {shape-class-or-*: {param: value, ...}}}``) overrides entries
+     without code changes.  ``choose_route`` consults the table too: an entry
+     may pin ``"route": "xla" | "pallas"`` for its shape class, which wins
+     over the backend default in ``auto`` mode (explicit modes still win).
 """
 
 from __future__ import annotations
 
 import contextlib
 import functools
+import json
 import os
 import threading
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +69,16 @@ from repro.core import ozaki2
 
 MODES = ("auto", "xla", "pallas")
 ENV_VAR = "REPRO_DISPATCH"
+TUNE_VAR = "REPRO_TUNE"
 
 # Fused-kernel kinds the router understands.  "gemm"/"gemv" share the matmul
 # entry point (split on RHS width); "spmv_bell" and "stencil7" have their own.
 KINDS = ("gemm", "gemv", "spmv_bell", "stencil7")
+
+# Kinds the autotuning table covers: the fused-kernel kinds plus the
+# blocked-EFT compensated reductions (no fused Pallas kernel yet — the blocked
+# jnp pipeline *is* the vector-pipe fast path, so its route is always "xla").
+TUNE_KINDS = KINDS + ("reduce",)
 
 # Per-kind auto-route defaults by backend family.  One table instead of the
 # old per-wrapper ``_default_interpret()`` logic: the fused kernels are the
@@ -70,6 +90,7 @@ AUTO_ROUTE = {
     "gemv": {"tpu": "pallas", "default": "xla"},
     "spmv_bell": {"tpu": "pallas", "default": "xla"},
     "stencil7": {"tpu": "pallas", "default": "xla"},
+    "reduce": {"default": "xla"},
 }
 
 # MXU geometry (Pallas TPU tiling constraints): second-minor axis in sublane
@@ -153,6 +174,96 @@ def clear_plan_cache() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Autotuning table: (kind, shape-class) -> block/tile parameters
+# ---------------------------------------------------------------------------
+
+# Seeded (measured) tuning entries.  "*" is the per-kind wildcard; specific
+# shape-classes (see ``shape_class``) override it.  GEMM/GEMV entries mirror
+# the MXU defaults (DEFAULT_BM/BN/BK); spmv_bell/stencil7 carry the kernel
+# defaults so every kind resolves its blocking here rather than in
+# per-call-site constants.
+TUNE_TABLE: Dict[Tuple[str, str], Dict[str, Any]] = {
+    ("gemm", "*"): {"bm": 128, "bn": 128, "bk": 256},
+    ("gemv", "*"): {"bm": 128, "bk": 256},
+    ("spmv_bell", "*"): {"br": 128},
+    ("stencil7", "*"): {"bz": 8},
+    ("reduce", "*"): {"block": 512},
+    # Measured on CPU (f64 compensated_dot sweep): short vectors are
+    # dispatch-bound and flat across blocks; >=64k-element reductions favor
+    # the shorter 256-lane block (smaller carry scan wins over tree width).
+    ("reduce", "65536"): {"block": 256},
+    ("reduce", "131072"): {"block": 256},
+}
+
+
+def _next_pow2(n: int) -> int:
+    n = max(1, int(n))
+    return 1 << (n - 1).bit_length()
+
+
+def shape_class(dims: Sequence[int]) -> str:
+    """Bucket a shape into its tuning class: each dim rounded up to the next
+    power of two, joined with "x" (e.g. (100, 64, 24) -> "128x64x32")."""
+    return "x".join(str(_next_pow2(d)) for d in dims)
+
+
+@functools.lru_cache(maxsize=None)
+def _tune_overrides(env: str) -> Dict[Tuple[str, str], Dict[str, Any]]:
+    """Parse REPRO_TUNE (inline JSON, or a path to a JSON file) into the same
+    (kind, class) -> params mapping as TUNE_TABLE.  Malformed input raises —
+    a silently-ignored tuning override is worse than a loud one."""
+    if not env:
+        return {}
+    text = env
+    if not env.lstrip().startswith("{"):
+        with open(env) as fh:
+            text = fh.read()
+    raw = json.loads(text)
+    table: Dict[Tuple[str, str], Dict[str, Any]] = {}
+    for kind, classes in raw.items():
+        if kind not in TUNE_KINDS:
+            raise ValueError(f"{TUNE_VAR}: unknown kind {kind!r} "
+                             f"(expected one of {TUNE_KINDS})")
+        for cls, params in classes.items():
+            table[(kind, str(cls))] = dict(params)
+    return table
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_tuning(kind: str, cls: str, env: str) -> Dict[str, Any]:
+    merged: Dict[str, Any] = {}
+    overrides = _tune_overrides(env)
+    for layer in (TUNE_TABLE.get((kind, "*")), TUNE_TABLE.get((kind, cls)),
+                  overrides.get((kind, "*")), overrides.get((kind, cls))):
+        if layer:
+            merged.update(layer)
+    return merged
+
+
+def get_tuning(kind: str, dims: Sequence[int]) -> Dict[str, Any]:
+    """Tuning parameters for ``kind`` at this shape-class (memoised, like the
+    plan cache): seeded TUNE_TABLE defaults layered under any REPRO_TUNE
+    overrides, most-specific last.  Returns a (shared) dict — treat as
+    read-only."""
+    if kind not in TUNE_KINDS:
+        raise ValueError(f"tuning kind must be one of {TUNE_KINDS}, got {kind!r}")
+    return _cached_tuning(kind, shape_class(dims),
+                          os.environ.get(TUNE_VAR, ""))
+
+
+def clear_tune_cache() -> None:
+    """Drop memoised tuning lookups (tests flip REPRO_TUNE between cases)."""
+    _cached_tuning.cache_clear()
+    _tune_overrides.cache_clear()
+
+
+def reduce_block(n: int) -> int:
+    """Block size for the blocked-EFT reductions over length-n operands —
+    the ``repro.core.compensated`` fast path resolves its blocking here."""
+    return max(1, int(get_tuning("reduce", (n,)).get("block", 512)))
+
+
+# ---------------------------------------------------------------------------
 # Shape normalisation
 # ---------------------------------------------------------------------------
 
@@ -163,17 +274,24 @@ def _round_up(x: int, mult: int) -> int:
 def choose_blocks(m: int, k: int, n: int) -> Tuple[int, int, int]:
     """MXU-friendly (bm, bn, bk) for an (m, k) x (k, n) problem.
 
-    Large problems use the default 128/128/256 tiling; smaller axes shrink to
-    the dimension rounded up to the hardware granule (sublane 8 for the
-    second-minor m-axis, lane 128 for the minor n/k axes) so padding stays
-    bounded while tiles keep legal Mosaic shapes.
+    The target tiling comes from the autotuning table (kind "gemm"/"gemv" by
+    RHS width, default 128/128/256); smaller axes shrink to the dimension
+    rounded up to the hardware granule (sublane 8 for the second-minor m-axis,
+    lane 128 for the minor n/k axes) so padding stays bounded while tiles keep
+    legal Mosaic shapes.  Tuned values are clamped to the same legality rules,
+    so a bad REPRO_TUNE entry degrades performance, never correctness.
     """
-    bm = DEFAULT_BM if m >= DEFAULT_BM else _round_up(m, SUBLANE)
-    bn = DEFAULT_BN if n >= DEFAULT_BN else _round_up(n, LANE)
+    tune = get_tuning(_matmul_kind(n), (m, k, n))
+    tbm = int(tune.get("bm", DEFAULT_BM))
+    tbn = int(tune.get("bn", DEFAULT_BN))
+    tbk = int(tune.get("bk", DEFAULT_BK))
+    bm = _round_up(tbm, SUBLANE) if m >= tbm else _round_up(m, SUBLANE)
+    bn = _round_up(tbn, LANE) if n >= tbn else _round_up(n, LANE)
     # bk must divide the lane-padded K; falling back to one lane (128) keeps
     # the K padding at < one lane of zeros (bk=256 on k=257 would pad to 512).
+    tbk = max(LANE, _round_up(tbk, LANE))
     kp = _round_up(k, LANE)
-    bk = DEFAULT_BK if kp % DEFAULT_BK == 0 else LANE
+    bk = tbk if kp % tbk == 0 else LANE
     return bm, bn, bk
 
 
@@ -205,27 +323,47 @@ def pad_operands(a: jax.Array, b: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _validate_kind(kind: str) -> str:
-    if kind not in KINDS:
-        raise ValueError(f"dispatch kind must be one of {KINDS}, got {kind!r}")
+    if kind not in TUNE_KINDS:
+        raise ValueError(f"dispatch kind must be one of {TUNE_KINDS}, "
+                         f"got {kind!r}")
     return kind
 
 
-def pallas_supported(plan: ozaki2.Plan, kind: str = "gemm") -> bool:
+def pallas_supported(plan: Optional[ozaki2.Plan], kind: str = "gemm") -> bool:
     """The fused kernels implement the int8 residue substrate only; the FP8
-    Karatsuba substrate runs through the XLA reference path (every kind)."""
+    Karatsuba substrate runs through the XLA reference path (every kind).
+    The ``reduce`` kind has no fused kernel at all — its blocked-EFT jnp
+    pipeline is the vector-pipe fast path."""
     _validate_kind(kind)
-    return plan.substrate == "int8"
+    if kind == "reduce":
+        return False
+    return plan is not None and plan.substrate == "int8"
 
 
-def choose_route(plan: ozaki2.Plan, kind: str = "gemm",
-                 mode: Optional[str] = None) -> str:
-    """Resolve a concrete route ('xla' | 'pallas') for this plan/kind/mode."""
+def choose_route(plan: Optional[ozaki2.Plan], kind: str = "gemm",
+                 mode: Optional[str] = None,
+                 shape: Optional[Sequence[int]] = None) -> str:
+    """Resolve a concrete route ('xla' | 'pallas') for this plan/kind/mode.
+
+    ``shape`` (the operand dimensions, optional) lets ``auto`` mode consult
+    the autotuning table: a tuning entry carrying ``"route"`` pins the route
+    for its (kind, shape-class) ahead of the backend default — e.g. forcing
+    tiny problems onto the reference path even on TPU.  Explicit modes and
+    substrate support still win over the table.
+    """
     _validate_kind(kind)
     mode = _validate_mode(mode) if mode is not None else get_mode()
     if mode == "xla" or not pallas_supported(plan, kind):
         return "xla"
     if mode == "pallas":
         return "pallas"
+    if shape is not None:
+        route = get_tuning(kind, shape).get("route")
+        if route is not None:
+            if route not in ("xla", "pallas"):
+                raise ValueError(f"tuned route must be 'xla' or 'pallas', "
+                                 f"got {route!r}")
+            return route
     table = AUTO_ROUTE[kind]
     return table.get(jax.default_backend(), table["default"])
 
@@ -288,7 +426,9 @@ def matmul(a: jax.Array, b: jax.Array, plan: Optional[ozaki2.Plan] = None,
     """
     if plan is None:
         plan = get_plan(a.shape[-1], payload_bits, substrate)
-    if choose_route(plan, _matmul_kind(b.shape[1]), mode) == "pallas":
+    shape = (a.shape[0], a.shape[1], b.shape[1])
+    if choose_route(plan, _matmul_kind(b.shape[1]), mode,
+                    shape=shape) == "pallas":
         return _pallas_matmul(a, b, plan)
     return ozaki2.emulated_matmul(a, b, plan, out_dtype=_working_float())
 
@@ -305,7 +445,7 @@ def dot(x: jax.Array, w: jax.Array, plan: Optional[ozaki2.Plan] = None,
 
 def spmv(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
          plan: Optional[ozaki2.Plan] = None, out_rep: str = "f64",
-         br: int = 128, mode: Optional[str] = None) -> jax.Array:
+         br: Optional[int] = None, mode: Optional[str] = None) -> jax.Array:
     """Emulated Blocked-ELL SpMV y = A x through the dispatch layer.
 
     a_val: (M, bw) padded per-row nonzero values, a_col: (M, bw) int32 column
@@ -321,14 +461,16 @@ def spmv(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
 
     if plan is None:
         plan = get_plan(a_val.shape[1], margin_bits=4)
-    if choose_route(plan, "spmv_bell", mode) == "pallas":
+    if choose_route(plan, "spmv_bell", mode, shape=a_val.shape) == "pallas":
+        if br is None:
+            br = int(get_tuning("spmv_bell", a_val.shape).get("br", 128))
         return _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep,
                                br=br, interpret=pallas_interpret("spmv_bell"))
     return _spmv.spmv_bell_ref(a_val, a_col, x, plan, out_rep=out_rep)
 
 
 def stencil7(u: jax.Array, c: jax.Array, plan: Optional[ozaki2.Plan] = None,
-             out_rep: str = "f64", bz: int = 8,
+             out_rep: str = "f64", bz: Optional[int] = None,
              mode: Optional[str] = None) -> jax.Array:
     """Emulated 7-point stencil v = S[c] u through the dispatch layer.
 
@@ -342,7 +484,9 @@ def stencil7(u: jax.Array, c: jax.Array, plan: Optional[ozaki2.Plan] = None,
 
     if plan is None:
         plan = get_plan(8, margin_bits=4)
-    if choose_route(plan, "stencil7", mode) == "pallas":
+    if choose_route(plan, "stencil7", mode, shape=u.shape) == "pallas":
+        if bz is None:
+            bz = int(get_tuning("stencil7", u.shape).get("bz", 8))
         return _stencil.stencil7(u, c, plan, out_rep=out_rep, bz=bz,
                                  interpret=pallas_interpret("stencil7"))
     return _stencil.stencil7_ref(u, c, plan, out_rep=out_rep)

@@ -96,14 +96,14 @@ def jacobi_solve(f: jax.Array,
     diag = float(c[0])
     u = jnp.zeros_like(f) if x0 is None else x0
 
-    fnorm = float(compensated.compensated_norm(f.reshape(-1)))
+    fnorm = float(compensated.compensated_norm(f))
     fnorm = max(fnorm, 1e-300)
 
     def residual(u):
         return f - dispatch.stencil7(u, c, plan=plan, mode=mode)
 
     r = residual(u)
-    rel = float(compensated.compensated_norm(r.reshape(-1))) / fnorm
+    rel = float(compensated.compensated_norm(r)) / fnorm
     history: List[float] = [rel]
     if rel < tol:
         return JacobiResult(u, 0, rel, True, history)
@@ -113,7 +113,7 @@ def jacobi_solve(f: jax.Array,
         u = u + (omega / diag) * r
         r = residual(u)
         if it % check_every == 0 or it == maxiter:
-            rel = float(compensated.compensated_norm(r.reshape(-1))) / fnorm
+            rel = float(compensated.compensated_norm(r)) / fnorm
             history.append(rel)
             if rel < tol:
                 return JacobiResult(u, it, rel, True, history)

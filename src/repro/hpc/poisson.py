@@ -91,8 +91,8 @@ def poisson_solve_checked(f: jax.Array,
     u = poisson_solve_periodic(f, spacings=spacings, mode=mode)
     rhs = jnp.asarray(f) - jnp.mean(jnp.asarray(f))
     res = apply_periodic_laplacian(u, spacings=spacings) - rhs
-    denom = float(compensated.compensated_norm(rhs.reshape(-1)))
-    rel = float(compensated.compensated_norm(res.reshape(-1))) / max(denom, 1e-300)
+    denom = float(compensated.compensated_norm(rhs))
+    rel = float(compensated.compensated_norm(res)) / max(denom, 1e-300)
     return PoissonResult(u=u, residual=rel)
 
 

@@ -160,8 +160,19 @@ def cross_attn_apply(params: Dict, x: jax.Array, enc_out: jax.Array,
 # ---------------------------------------------------------------------------
 
 def cache_init(cfg: ModelConfig, batch: int, seq_len: int, window: int,
-               dtype=jnp.bfloat16) -> Dict:
-    """Ring-buffer cache: capacity = window for sliding layers else seq_len."""
+               dtype=None) -> Dict:
+    """Ring-buffer cache: capacity = window for sliding layers else seq_len.
+
+    The cache dtype follows the model's compute dtype (bfloat16 in the
+    production configs).  It used to be hard-coded bfloat16, which silently
+    quantised K/V during decode while the teacher-forced forward pass kept
+    full compute precision — a ~1e-2 per-score perturbation that MoE top-k
+    routing amplified into 0.1–0.35 logit flips at near-tied expert
+    boundaries (the old decode-vs-forward xfails).  With the cache in
+    compute dtype, decode is bit-identical to forward.
+    """
+    if dtype is None:
+        dtype = cfg.compute_jnp_dtype
     cap = min(window, seq_len) if window > 0 else seq_len
     shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -98,9 +98,12 @@ def block_cache_init(cfg: ModelConfig, blk: BlockCfg, batch: int, seq_len: int,
     elif blk.mixer == "slstm":
         c["ssm"] = ssm.slstm_state_init(cfg, batch)
     if cfg.family == "encdec" and enc_seq:
+        # Cross-attention cache follows compute dtype for the same reason as
+        # attention.cache_init: a lower-precision cache makes decode diverge
+        # from the teacher-forced forward pass.
         shape = (batch, enc_seq, cfg.num_kv_heads, cfg.head_dim)
-        c["cross_kv"] = {"k": jnp.zeros(shape, jnp.bfloat16),
-                         "v": jnp.zeros(shape, jnp.bfloat16)}
+        dt = cfg.compute_jnp_dtype
+        c["cross_kv"] = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
     return c
 
 

@@ -37,15 +37,26 @@ def test_compare_flags_only_regressions_beyond_threshold():
     current = {"a/us": 150.0, "b/us": 201.0, "new/us": 7.0}
     out = list(check_regression.compare("kernels", current, baseline, 2.0))
     warnings = [m for k, m in out if k == "warning"]
-    notes = [m for k, m in out if k == "note"]
+    notices = [m for k, m in out if k == "notice"]
     assert len(warnings) == 1 and "b/us" in warnings[0]      # 2.01x > 2x
-    assert any("new/us" in n for n in notes)                 # new row noted
-    assert any("gone/us" in n for n in notes)                # dropped row noted
+    assert any("new/us" in n for n in notices)               # new row noticed
+    assert any("gone/us" in n for n in notices)              # dropped row too
 
 
-def test_compare_unknown_section_is_note_not_warning():
+def test_compare_unknown_section_is_notice_not_warning():
     out = list(check_regression.compare("mystery", {"x/us": 1.0}, {}, 2.0))
-    assert [k for k, _ in out] == ["note"]
+    assert [k for k, _ in out] == ["notice"]
+
+
+def test_main_new_rows_annotate_as_notice_and_exit_zero(tmp_path, capsys):
+    """First CI run of a new section: baseline has no rows for it — the run
+    must neither crash nor warn, only ::notice:: (even under --strict)."""
+    base = _write(tmp_path / "baseline.json", {"dispatch": {"r/us": 10.0}})
+    cur = _write(tmp_path / "BENCH_reductions.json", {"dot/us": 5.0})
+    rc = check_regression.main([cur, "--baseline", base, "--strict"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "::notice" in out and "::warning" not in out
 
 
 def test_main_warns_but_exits_zero(tmp_path, capsys):
@@ -72,19 +83,33 @@ def test_main_write_baseline_round_trips(tmp_path):
                                   "--strict"]) == 0
 
 
+def test_write_baseline_merges_sections(tmp_path):
+    """A partial --section run refreshes only its own sections; the rest of
+    the committed baseline survives."""
+    base = _write(tmp_path / "baseline.json",
+                  {"kernels": {"k/us": 3.0}, "spectral": {"fft/us": 9.0}})
+    cur = _write(tmp_path / "BENCH_spectral.json", {"fft/us": 12.5})
+    assert check_regression.main([cur, "--baseline", base,
+                                  "--write-baseline"]) == 0
+    assert json.loads(Path(base).read_text()) == {
+        "kernels": {"k/us": 3.0}, "spectral": {"fft/us": 12.5}}
+
+
 def test_committed_baseline_covers_ci_smoke_sections():
     """benchmarks/baseline.json (the committed trajectory anchor) must have
     rows for every section the CI fast lane runs with --json."""
     baseline = json.loads((REPO_ROOT / "benchmarks" / "baseline.json").read_text())
-    for section in ("table1", "dispatch", "spectral", "kernels"):
+    for section in ("table1", "dispatch", "spectral", "kernels", "reductions"):
         assert section in baseline, f"baseline missing section {section}"
     # table1 is derived-only (model rows, us == 0) and legitimately empty;
     # the empirical sections must carry timing rows.
-    for section in ("dispatch", "spectral", "kernels"):
+    for section in ("dispatch", "spectral", "kernels", "reductions"):
         assert baseline[section], f"baseline section {section} has no rows"
     # route rows of the new seam kinds are part of the trajectory
     assert "kernel_spmv/route_pallas/us" in baseline["kernels"]
     assert "kernel_stencil/route_pallas/us" in baseline["kernels"]
+    # the blocked-EFT reduction rows anchor the BLAS-1 trajectory
+    assert "reductions/dot_blocked_n4096/us" in baseline["reductions"]
 
 
 def test_run_json_writer_skips_derived_only_rows(tmp_path):

@@ -333,3 +333,96 @@ def test_spmv_routes_bit_identical_small_plan():
     y_pal = np.asarray(dispatch.spmv(val, col, x, plan=plan, br=8,
                                      mode="pallas"))
     np.testing.assert_array_equal(y_xla, y_pal)
+
+
+# ---------------------------------------------------------------------------
+# Autotuning table (get_tuning / REPRO_TUNE)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def tune_env(monkeypatch):
+    """Set REPRO_TUNE and clear the memoised lookups, restoring both after."""
+    def setter(value):
+        monkeypatch.setenv(dispatch.TUNE_VAR, value)
+        dispatch.clear_tune_cache()
+    yield setter
+    dispatch.clear_tune_cache()
+
+
+def test_shape_class_buckets_to_next_pow2():
+    assert dispatch.shape_class((100, 64, 24)) == "128x64x32"
+    assert dispatch.shape_class((4096,)) == "4096"
+    assert dispatch.shape_class((1,)) == "1"
+
+
+def test_get_tuning_specific_class_overrides_wildcard():
+    assert dispatch.get_tuning("reduce", (4096,))["block"] == 512
+    assert dispatch.get_tuning("reduce", (65536,))["block"] == 256
+    # 40000 buckets to the 65536 class
+    assert dispatch.reduce_block(40000) == 256
+    assert dispatch.reduce_block(4096) == 512
+
+
+def test_get_tuning_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="tuning kind"):
+        dispatch.get_tuning("fft", (64,))
+
+
+def test_repro_tune_inline_json_overrides(tune_env):
+    tune_env('{"reduce": {"*": {"block": 64}, "1024": {"block": 32}}}')
+    assert dispatch.reduce_block(4096) == 64
+    assert dispatch.reduce_block(1000) == 32    # class-specific beats wildcard
+
+
+def test_repro_tune_file(tmp_path, tune_env):
+    p = tmp_path / "tune.json"
+    p.write_text('{"reduce": {"*": {"block": 128}}}')
+    tune_env(str(p))
+    assert dispatch.reduce_block(4096) == 128
+
+
+def test_repro_tune_unknown_kind_raises(tune_env):
+    tune_env('{"warp_drive": {"*": {"block": 64}}}')
+    with pytest.raises(ValueError, match="unknown kind"):
+        dispatch.reduce_block(4096)
+
+
+def test_tuned_route_pin_wins_in_auto_mode(tune_env):
+    plan = dispatch.get_plan(64)  # int8 substrate: pallas-capable
+    # CPU's AUTO_ROUTE default for gemm is xla; a tuned entry pins pallas.
+    tune_env('{"gemm": {"*": {"route": "pallas"}}}')
+    assert dispatch.choose_route(plan, "gemm", shape=(128, 64, 128)) == "pallas"
+    # ... but an explicit mode still wins over the table.
+    assert dispatch.choose_route(plan, "gemm", mode="xla",
+                                 shape=(128, 64, 128)) == "xla"
+
+
+def test_tuned_route_invalid_value_raises(tune_env):
+    plan = dispatch.get_plan(64)
+    tune_env('{"gemm": {"*": {"route": "auto"}}}')
+    with pytest.raises(ValueError, match="tuned route"):
+        dispatch.choose_route(plan, "gemm", shape=(128, 64, 128))
+
+
+def test_reduce_kind_has_no_pallas_route():
+    assert not dispatch.pallas_supported(None, "reduce")
+    assert dispatch.choose_route(None, "reduce", mode="pallas") == "xla"
+
+
+def test_choose_blocks_tuned_values_are_legality_clamped(tune_env):
+    tune_env('{"gemm": {"*": {"bm": 100, "bn": 100, "bk": 100}}}')
+    bm, bn, bk = dispatch.choose_blocks(512, 512, 512)
+    assert bm == 104          # rounded up to the sublane granule (8)
+    assert bn == 128          # rounded up to the lane granule (128)
+    assert bk == 128          # lane-rounded and dividing the padded K
+    # A bad tuning entry degrades performance, never correctness/legality.
+    assert bm % dispatch.SUBLANE == 0 and bn % dispatch.LANE == 0
+
+
+def test_tuned_blocks_keep_pallas_route_bit_identical(tune_env):
+    a = jnp.asarray(RNG.standard_normal((16, 48)))
+    b = jnp.asarray(RNG.standard_normal((48, 8)))
+    want = np.asarray(dispatch.matmul(a, b, mode="xla"))
+    tune_env('{"gemv": {"*": {"bm": 8, "bk": 128}}}')
+    got = np.asarray(dispatch.matmul(a, b, mode="pallas"))
+    np.testing.assert_array_equal(want, got)

@@ -93,3 +93,22 @@ def test_cg_compensated_vs_plain_delta_observable_f32():
     # ... but the plain-f32 reductions are visibly off the compensated ones
     # (the compensated dot carries ~2^-48; plain f32 only ~2^-24·n).
     assert max(deltas) > 2.0 ** -24
+
+
+def test_cg_iteration_counts_unchanged_by_blocked_eft():
+    """The blocked-EFT swap must not move CG's trajectory: driving the
+    recurrence with the element-wise scan reference (the pre-blocking
+    implementation) yields the same iteration count and the same residual
+    history to a few ulps."""
+    from repro.core import compensated
+
+    dense = jnp.asarray(spmv_formats.laplacian_2d(8, 8))
+    b = jnp.asarray(np.random.default_rng(5).standard_normal(64))
+    blocked = cg_solve(lambda x: dense @ x, b, tol=1e-10, maxiter=200,
+                       record_plain=False)
+    scan = cg_solve(lambda x: dense @ x, b, tol=1e-10, maxiter=200,
+                    dot=compensated.compensated_dot_scan,
+                    record_plain=False)
+    assert blocked.converged and scan.converged
+    assert blocked.iters == scan.iters
+    np.testing.assert_allclose(blocked.history, scan.history, rtol=1e-12)

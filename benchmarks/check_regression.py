@@ -25,6 +25,18 @@ never a warning, never a crash.
 comparing; it merges section-wise, so a partial ``--section`` run updates only
 its own sections and keeps the rest of the committed baseline.
 
+BENCH rows may be bare floats (legacy) or self-describing objects
+(``{"us":…, "route":…, "shape_class":…}``, from telemetry-aware sections);
+both are accepted, and ``--write-baseline`` normalises to plain floats so the
+committed baseline format is unchanged.
+
+``--telemetry report.json`` additionally audits a telemetry snapshot
+(``repro.obs`` ``write_json`` output): any kind whose measured/TME-predicted
+ratio exceeds ``REPRO_TME_NOTICE_RATIO`` (default 10) prints a ``::notice::``
+annotation.  Notice, never warning: on the CPU CI runner the ratio is *always*
+enormous (the chip model is a TPU spec and the pallas route runs the kernel
+interpreter) — the annotation tracks the trajectory, it does not gate.
+
 Deliberately dependency-free (no jax import): CI runs it in seconds.
 """
 
@@ -39,6 +51,15 @@ from typing import Dict
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 _BENCH_RE = re.compile(r"BENCH_(?P<section>[A-Za-z0-9_]+)\.json$")
+NOTICE_RATIO_VAR = "REPRO_TME_NOTICE_RATIO"
+DEFAULT_NOTICE_RATIO = 10.0
+
+
+def _us(value) -> float:
+    """Timing of a BENCH row: bare float or self-describing {"us": ...}."""
+    if isinstance(value, dict):
+        return float(value.get("us", 0.0))
+    return float(value)
 
 
 def section_of(path: str) -> str:
@@ -71,12 +92,14 @@ def compare(section: str, current: Dict[str, float],
                          f"{len(current)} row(s) recorded only — refresh with "
                          "--write-baseline")
         return
-    for name, us in sorted(current.items()):
-        base = base_rows.get(name)
-        if base is None:
+    for name, value in sorted(current.items()):
+        us = _us(value)
+        base_value = base_rows.get(name)
+        if base_value is None:
             yield ("notice", f"{section}: new row {name} ({us:.2f} us) "
                              "not in baseline")
             continue
+        base = _us(base_value)
         if base <= 0.0 or us <= 0.0:
             continue
         ratio = us / base
@@ -87,6 +110,27 @@ def compare(section: str, current: Dict[str, float],
     for name in sorted(set(base_rows) - set(current)):
         yield ("notice",
                f"{section}: baseline row {name} missing from this run")
+
+
+def audit_telemetry(snapshot: Dict, notice_ratio: float):
+    """Yield messages for kinds whose measured/TME ratio exceeds the notice
+    threshold.  Aggregates counters per (kind, route) — same grouping as
+    ``repro.obs.report`` — and skips entries with no TME prediction (event-only
+    kinds like solver.* / serve.*)."""
+    agg: Dict[tuple, Dict[str, float]] = {}
+    for c in snapshot.get("counters", []):
+        key = (c.get("kind", "?"), c.get("route", ""))
+        slot = agg.setdefault(key, {"us": 0.0, "tme_us": 0.0})
+        slot["us"] += float(c.get("us", 0.0))
+        slot["tme_us"] += float(c.get("tme_us", 0.0))
+    for (kind, route), slot in sorted(agg.items()):
+        if slot["tme_us"] <= 0.0 or slot["us"] <= 0.0:
+            continue
+        ratio = slot["us"] / slot["tme_us"]
+        if ratio > notice_ratio:
+            yield (f"telemetry {kind}/{route or '-'}: measured/TME ratio "
+                   f"{ratio:.1f}x > {notice_ratio:g}x "
+                   f"(chip model: {snapshot.get('chip', '?')})")
 
 
 def main(argv=None) -> int:
@@ -101,6 +145,11 @@ def main(argv=None) -> int:
     parser.add_argument("--write-baseline", action="store_true",
                         help="(re)write the baseline from these runs instead "
                              "of comparing")
+    parser.add_argument("--telemetry", default=None, metavar="SNAPSHOT.json",
+                        help="also audit a repro.obs telemetry snapshot: "
+                             "::notice:: any kind whose measured/TME ratio "
+                             f"exceeds ${NOTICE_RATIO_VAR} "
+                             f"(default {DEFAULT_NOTICE_RATIO:g})")
     args = parser.parse_args(argv)
 
     runs = {section_of(p): load_json(p) for p in args.files}
@@ -108,11 +157,13 @@ def main(argv=None) -> int:
     if args.write_baseline:
         # Merge-aware: replace only the sections present in this run, keep
         # the rest of the committed baseline (a partial --section run must
-        # not silently drop the other sections' history).
+        # not silently drop the other sections' history).  Self-describing
+        # rows normalise to plain floats — baseline format is unchanged.
         merged: Dict[str, Dict[str, float]] = {}
         if os.path.exists(args.baseline):
             merged.update(load_json(args.baseline))
-        merged.update(runs)
+        merged.update({sec: {name: _us(v) for name, v in rows.items()}
+                       for sec, rows in runs.items()})
         with open(args.baseline, "w") as fh:
             json.dump(dict(sorted(merged.items())), fh, indent=2,
                       sort_keys=True)
@@ -131,6 +182,11 @@ def main(argv=None) -> int:
                 print(f"::warning title=benchmark regression::{msg}")
             else:
                 print(f"::notice title=benchmark skew::{msg}")
+    if args.telemetry:
+        notice_ratio = float(os.environ.get(NOTICE_RATIO_VAR,
+                                            DEFAULT_NOTICE_RATIO))
+        for msg in audit_telemetry(load_json(args.telemetry), notice_ratio):
+            print(f"::notice title=TME model error::{msg}")
     total = sum(len(v) for v in runs.values())
     print(f"checked {total} rows across {len(runs)} section(s): "
           f"{regressions} regression(s) > {args.threshold:g}x")

@@ -1,5 +1,9 @@
 """Dispatch-layer benchmarks: plan-cache amortisation and XLA vs Pallas routing.
 
+The route rows carry telemetry provenance (route + shape_class columns via
+``repro.obs.probe``) so the BENCH artifact is self-describing; the probe runs
+one extra untimed call after the timing loop, telemetry stays off while timing.
+
 CSV rows (name,us_per_call,derived):
   dispatch/plan_cold/us        — first-touch make_plan + Garner setup
                                  (derived = r of the resolved plan);
@@ -29,8 +33,15 @@ import numpy as np
 
 from repro.core import dispatch, ozaki2
 from repro.core.policy import Policy
+from repro.obs import telemetry as obs
 
 Row = Tuple[str, float, float]
+
+
+def _provenance(fn) -> Tuple[str, str]:
+    """(route, shape_class) of fn's dispatch call, via a telemetry probe."""
+    _, ev = obs.probe(fn)
+    return (ev.route, ev.shape_class) if ev is not None else ("", "")
 
 _K = 256
 _SHAPE = (128, _K, 128)
@@ -81,10 +92,14 @@ def dispatch_paths() -> List[Row]:
     # --- routing: XLA reference vs fused Pallas kernel ------------------------
     flops = 2.0 * m * k * n
     us_xla = _timed(lambda: dispatch.matmul(a, b, plan=plan, mode="xla"))
-    rows.append(("dispatch/route_xla/us", us_xla, flops / us_xla * 1e-3))
+    rows.append(("dispatch/route_xla/us", us_xla, flops / us_xla * 1e-3,
+                 *_provenance(lambda: dispatch.matmul(a, b, plan=plan,
+                                                      mode="xla"))))
     us_pal = _timed(lambda: dispatch.matmul(a, b, plan=plan, mode="pallas"),
                     reps=1)
-    rows.append(("dispatch/route_pallas/us", us_pal, flops / us_pal * 1e-3))
+    rows.append(("dispatch/route_pallas/us", us_pal, flops / us_pal * 1e-3,
+                 *_provenance(lambda: dispatch.matmul(a, b, plan=plan,
+                                                      mode="pallas"))))
 
     # --- Policy.dot hot path with a warm cache --------------------------------
     # Pinned to the xla route so the row times the same code path in both legs

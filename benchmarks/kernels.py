@@ -31,8 +31,16 @@ import numpy as np
 
 from repro.core import ozaki2
 from repro.kernels import ops
+from repro.obs import telemetry as obs
 
 Row = Tuple[str, float, float]
+
+
+def _provenance(fn) -> Tuple[str, str]:
+    """(route, shape_class) of fn's dispatch call, via a telemetry probe —
+    one extra untimed call so the BENCH route rows are self-describing."""
+    _, ev = obs.probe(fn)
+    return (ev.route, ev.shape_class) if ev is not None else ("", "")
 
 
 def _timed(fn, *args, reps=3):
@@ -123,11 +131,15 @@ def all_kernels() -> List[Row]:
     stencil_out = {}
     for mode in ("xla", "pallas"):
         us = _timed(lambda mode=mode: ops.ozaki_stencil7(u, c, bz=8, mode=mode))
+        route, cls = _provenance(
+            lambda mode=mode: ops.ozaki_stencil7(u, c, bz=8, mode=mode))
         stencil_out[mode] = (f"kernel_stencil/route_{mode}/us", us,
-                             ops.ozaki_stencil7(u, c, bz=8, mode=mode))
+                             ops.ozaki_stencil7(u, c, bz=8, mode=mode),
+                             route, cls)
     diff = float(jnp.max(jnp.abs(stencil_out["pallas"][2]
                                  - stencil_out["xla"][2])))
-    rows.extend((name, us, diff) for name, us, _ in stencil_out.values())
+    rows.extend((name, us, diff, route, cls)
+                for name, us, _, route, cls in stencil_out.values())
 
     # spmv: 24-bit payload (r = 7) bounds the interpreter compile to seconds.
     plan_r7 = ozaki2.make_plan(8, payload_bits=24, margin_bits=4)
@@ -139,11 +151,15 @@ def all_kernels() -> List[Row]:
     for mode in ("xla", "pallas"):
         us = _timed(lambda mode=mode: ops.ozaki_spmv_bell(
             val_r, col_r, x_r, plan=plan_r7, br=128, mode=mode))
+        route, cls = _provenance(lambda mode=mode: ops.ozaki_spmv_bell(
+            val_r, col_r, x_r, plan=plan_r7, br=128, mode=mode))
         spmv_out[mode] = (f"kernel_spmv/route_{mode}/us", us,
                           ops.ozaki_spmv_bell(val_r, col_r, x_r, plan=plan_r7,
-                                              br=128, mode=mode))
+                                              br=128, mode=mode),
+                          route, cls)
     diff = float(jnp.max(jnp.abs(spmv_out["pallas"][2] - spmv_out["xla"][2])))
-    rows.extend((name, us, diff) for name, us, _ in spmv_out.values())
+    rows.extend((name, us, diff, route, cls)
+                for name, us, _, route, cls in spmv_out.values())
 
     # --- padding-ratio -> beta (Appendix D) -----------------------------------
     for rho in (1.0, 2.0, 4.0):

@@ -25,6 +25,9 @@ CSV rows (name,us_per_call,derived):
 
 On this CPU container the pallas CG row runs the kernel interpreter — a
 machinery/parity check, not a perf claim (same caveat as the kernels section).
+
+The blocked-dot and CG rows carry telemetry provenance (route + shape_class
+CSV columns via ``repro.obs.probe``, one extra untimed call after timing).
 """
 
 from __future__ import annotations
@@ -37,8 +40,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compensated
+from repro.core import compensated, dispatch
 from repro.hpc import cg
+from repro.obs import telemetry as obs
 
 Row = Tuple[str, float, float]
 
@@ -63,8 +67,10 @@ def _dot_rows(rng) -> List[Row]:
         us_blk, blk = _timed(lambda a=a, b=b: compensated.compensated_dot(a, b))
         plain_err = abs(float(jnp.dot(a, b)) - exact)
         comp_err = abs(float(blk) - exact)
+        _, ev = obs.probe(lambda a=a, b=b: compensated.compensated_dot(a, b))
+        route, cls = (ev.route, ev.shape_class) if ev is not None else ("", "")
         rows.append((f"reductions/dot_blocked_n{n}/us", us_blk,
-                     plain_err / max(comp_err, 1e-30)))
+                     plain_err / max(comp_err, 1e-30), route, cls))
         if n == 4096:
             us_scan, scan = _timed(
                 lambda a=a, b=b: compensated.compensated_dot_scan(a, b), reps=1)
@@ -110,7 +116,14 @@ def _cg_rows(rng) -> List[Row]:
         res = cg.cg_solve_dense(a, b, mode=mode, tol=1e-10, maxiter=2 * n,
                                 record_plain=False)
         results[mode] = res
-        rows.append((f"reductions/cg{n}_{mode}/us", us, float(res.iters)))
+        # Provenance from the solve's representative matvec (a probe of the
+        # whole solve would report its *last* routed event — a reduce, always
+        # xla — not the route under test).
+        _, ev = obs.probe(lambda mode=mode: dispatch.matmul(
+            a, b[:, None], mode=mode))
+        route, cls = (ev.route, ev.shape_class) if ev is not None else ("", "")
+        rows.append((f"reductions/cg{n}_{mode}/us", us, float(res.iters),
+                     route, cls))
     # Route parity: the dispatch routes are bit-identical, so the composed
     # solves must agree exactly — surfaced in CSV output, asserted in tests.
     delta = float(jnp.max(jnp.abs(results["xla"].x - results["pallas"].x)))

@@ -1,12 +1,17 @@
 """Benchmark harness — one section per paper table + empirical validations.
 
-Prints ``name,us_per_call,derived`` CSV (one row per measured/derived quantity).
+Prints ``name,us_per_call,derived,route,shape_class`` CSV (one row per
+measured/derived quantity; route/shape_class blank for rows the telemetry
+layer didn't observe).
 Run: ``PYTHONPATH=src python -m benchmarks.run [--section NAME] [--json [DIR]]``.
 
 ``--json`` additionally writes one ``BENCH_<section>.json`` file per section
-(``{row name: us_per_call}``) into DIR (default: the current directory) — the
-machine-readable perf-trajectory artifact CI uploads and feeds to
-``benchmarks.check_regression`` against the committed ``benchmarks/baseline.json``.
+into DIR (default: the current directory) — the machine-readable
+perf-trajectory artifact CI uploads and feeds to
+``benchmarks.check_regression`` against the committed
+``benchmarks/baseline.json``.  Rows with telemetry-sourced provenance are
+self-describing objects ``{"us":…, "route":…, "shape_class":…}``; plain rows
+stay bare floats (both forms are accepted downstream).
 
 x64 is enabled (before JAX initialises) because the emulation benchmarks compare
 against float64 oracles; device count stays 1 (the dry-run owns the 512-device
@@ -49,18 +54,44 @@ def _sections():
         "kernels": _section("kernels", "all_kernels"),
         "reductions": _section("reductions", "reductions_section"),
         "models": _section("models", "smoke_step_timings"),
+        "telemetry": _section("telemetry", "telemetry_section"),
     }
 
 
+def _normalize(row):
+    """Accept legacy 3-tuples and telemetry-aware 5-tuples uniformly.
+
+    Returns (name, us, derived, route, shape_class) with route/shape_class ""
+    for rows that carry no provenance.
+    """
+    if len(row) == 3:
+        name, us, derived = row
+        return name, us, derived, "", ""
+    name, us, derived, route, shape_class = row
+    return name, us, derived, route or "", shape_class or ""
+
+
 def write_json(section: str, rows, out_dir: str) -> str:
-    """Write BENCH_<section>.json (row name -> us_per_call) and return its path.
+    """Write BENCH_<section>.json (row name -> timing) and return its path.
 
     Derived-only rows (us == 0: model projections, structural bounds) are
     timing-free and excluded — the JSON is the perf trajectory, not the table.
+    Rows with telemetry provenance serialise as ``{"us":…, "route":…,
+    "shape_class":…}`` so the artifact is self-describing; bare rows stay
+    plain floats for baseline compatibility.
     """
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{section}.json")
-    payload = {name: round(us, 2) for name, us, _ in rows if us > 0.0}
+    payload = {}
+    for row in rows:
+        name, us, _, route, shape_class = _normalize(row)
+        if us <= 0.0:
+            continue
+        if route or shape_class:
+            payload[name] = {"us": round(us, 2), "route": route,
+                             "shape_class": shape_class}
+        else:
+            payload[name] = round(us, 2)
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")
@@ -86,7 +117,7 @@ def main() -> None:
                          f"available: {', '.join(secs)}")
     else:
         names = list(secs)
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,route,shape_class")
     ok = True
     for name in names:
         try:
@@ -95,8 +126,9 @@ def main() -> None:
             ok = False
             print(f"{name}/ERROR,0,0  # {type(e).__name__}: {e}", file=sys.stderr)
             continue
-        for row, us, derived in rows:
-            print(f"{row},{us:.2f},{derived:.6g}")
+        for row in rows:
+            rname, us, derived, route, shape_class = _normalize(row)
+            print(f"{rname},{us:.2f},{derived:.6g},{route},{shape_class}")
         if args.json is not None:
             write_json(name, rows, args.json)
     if not ok:

@@ -1,0 +1,99 @@
+"""Telemetry benchmark section — measured-vs-TME through the seam's own
+instrument.
+
+Unlike the other sections, nothing here is timed by hand: every op runs under
+``REPRO_TELEMETRY`` trace scope and the wall-clock comes from the telemetry
+counters themselves (``block_until_ready``-fenced inside ``obs.op_end``), so
+this section exercises the recording path end to end while producing the
+measured-vs-TME table for all four fused kinds + reduce, on *both* routes.
+
+CSV rows (name,us_per_call,derived,route,shape_class):
+  telemetry/<kind>_<route>/us — mean measured μs per call from the counters;
+                                derived = measured/TME-predicted ratio (the
+                                model-error ratio; large on CPU — the chip
+                                model is the TPU v5e spec and the pallas
+                                route runs the interpreter — recorded for the
+                                trajectory, gated as ::notice:: by
+                                ``check_regression --telemetry``).
+
+The SpMV rows use a 24-bit-payload plan (r = 7): the interpreted gather graph
+at the default r = 15 plan costs 10+ minutes of XLA-CPU compile (ROADMAP).
+
+Side artifact: when ``REPRO_TELEMETRY_JSON`` names a path, the full telemetry
+snapshot (counters + caches + trace ring) is written there — the per-leg
+``telemetry-<mode>`` CI artifact.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compensated, dispatch, ozaki2
+from repro.obs import report, telemetry as obs
+
+Row = Tuple[str, float, float, str, str]
+
+JSON_VAR = "REPRO_TELEMETRY_JSON"
+_REPS = 3
+
+
+def _workloads():
+    """(callable, reps) covering every fused kind + reduce, per route."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((128, 256)))
+    b = jnp.asarray(rng.standard_normal((256, 128)))
+    v = jnp.asarray(rng.standard_normal((256, 4)))
+    u = jnp.asarray(rng.standard_normal((32, 32, 32)))
+    c = jnp.asarray(np.array([6.0, -1, -1, -1, -1, -1, -1]))
+    plan_r7 = ozaki2.make_plan(8, payload_bits=24, margin_bits=4)
+    val = jnp.asarray(rng.standard_normal((256, 8)))
+    col = jnp.asarray(rng.integers(0, 256, (256, 8)).astype(np.int32))
+    x = jnp.asarray(rng.standard_normal(256))
+    d1 = jnp.asarray(rng.standard_normal(4096))
+    d2 = jnp.asarray(rng.standard_normal(4096))
+
+    work = []
+    for mode in ("xla", "pallas"):
+        # The pallas leg runs the kernel interpreter on CPU: one rep each.
+        reps = _REPS if mode == "xla" else 1
+        work.append((lambda mode=mode: dispatch.matmul(a, b, mode=mode), reps))
+        work.append((lambda mode=mode: dispatch.matmul(a, v, mode=mode), reps))
+        work.append((lambda mode=mode: dispatch.stencil7(u, c, mode=mode),
+                     reps))
+        work.append((lambda mode=mode: dispatch.spmv(
+            val, col, x, plan=plan_r7, br=128, mode=mode), reps))
+    work.append((lambda: compensated.compensated_dot(d1, d2), _REPS))
+    return work
+
+
+def telemetry_section() -> List[Row]:
+    obs.reset()
+    with obs.telemetry_scope("trace"):
+        for fn, reps in _workloads():
+            fn()                      # warm-up (compile) outside the counters
+        obs.reset()
+        for fn, reps in _workloads():
+            for _ in range(reps):
+                fn()
+        snap = obs.snapshot()
+        json_path = os.environ.get(JSON_VAR)
+        if json_path:
+            obs.write_json(json_path)
+
+    # The human-readable measured-vs-TME table rides stderr so the CSV on
+    # stdout stays machine-parseable.
+    print(report.render(report.table_rows(snap), chip=snap["chip"]),
+          file=sys.stderr)
+
+    rows: List[Row] = []
+    for c in snap["counters"]:
+        calls = max(int(c["calls"]), 1)
+        ratio = c["us"] / c["tme_us"] if c["tme_us"] > 0 else 0.0
+        rows.append((f"telemetry/{c['kind']}_{c['route']}/us",
+                     c["us"] / calls, ratio, c["route"], c["shape_class"]))
+    return rows

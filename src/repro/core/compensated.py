@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.numerics import fast_two_sum, two_prod, two_sum  # noqa: F401
+from repro.obs import telemetry as obs
 
 __all__ = ["two_sum", "two_prod", "fast_two_sum", "neumaier_sum",
            "compensated_dot", "compensated_norm", "neumaier_sum_scan",
@@ -153,7 +154,25 @@ def neumaier_sum(x: jax.Array, axis: int = -1,
     """
     x = jnp.asarray(x)
     x = jnp.moveaxis(x, _normalize_axis(axis, x.ndim), -1)
-    return _blocked_sum2(x, jnp.zeros_like(x), _resolve_block(x.shape[-1], block))
+    rec = obs.op_start("reduce", (x.shape[-1],), "xla", None, x, label="sum2")
+    out = _blocked_sum2(x, jnp.zeros_like(x), _resolve_block(x.shape[-1], block))
+    return obs.op_end(rec, out)
+
+
+def _dot_impl(x: jax.Array, y: jax.Array, axis: int,
+              block: Optional[int]) -> jax.Array:
+    """Blocked Dot2 body, shared by ``compensated_dot`` (which records a
+    telemetry event) and ``compensated_norm`` (which records its own — one
+    event per public call, not one per internal reduction)."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if x.shape != y.shape:
+        raise ValueError(f"operand shapes differ: {x.shape} vs {y.shape}")
+    ax = _normalize_axis(axis, x.ndim)
+    x = jnp.moveaxis(x, ax, -1)
+    y = jnp.moveaxis(y, ax, -1)
+    p, e = two_prod(x, y)
+    return _blocked_sum2(p, e, _resolve_block(x.shape[-1], block))
 
 
 def compensated_dot(x: jax.Array, y: jax.Array, axis: int = -1,
@@ -168,13 +187,9 @@ def compensated_dot(x: jax.Array, y: jax.Array, axis: int = -1,
     """
     x = jnp.asarray(x)
     y = jnp.asarray(y)
-    if x.shape != y.shape:
-        raise ValueError(f"operand shapes differ: {x.shape} vs {y.shape}")
-    ax = _normalize_axis(axis, x.ndim)
-    x = jnp.moveaxis(x, ax, -1)
-    y = jnp.moveaxis(y, ax, -1)
-    p, e = two_prod(x, y)
-    return _blocked_sum2(p, e, _resolve_block(x.shape[-1], block))
+    rec = obs.op_start("reduce", (x.shape[_normalize_axis(axis, x.ndim)],),
+                       "xla", None, x, y, label="dot2")
+    return obs.op_end(rec, _dot_impl(x, y, axis, block))
 
 
 # IEEE-754 layouts: dtype -> (bit-int dtype, mantissa bits, exponent bias,
@@ -248,6 +263,7 @@ def compensated_norm(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
         ax = 0
     else:
         ax = _normalize_axis(axis, x.ndim)
+    rec = obs.op_start("reduce", (x.shape[ax],), "xla", None, x, label="nrm2")
     it, mb, eb, _ = _ieee_layout(x.dtype)
     finite = jnp.isfinite(x)
     has_nan = jnp.any(jnp.isnan(x), axis=ax)
@@ -268,7 +284,7 @@ def compensated_norm(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
     # that the clip in _pow2 engages contribute < u**4 relatively — below
     # even the compensated bound.)
     xs = m * _pow2(e - es, x.dtype)
-    r = jnp.sqrt(compensated_dot(xs, xs, axis=ax))     # in [1, ~2*sqrt(n)]
+    r = jnp.sqrt(_dot_impl(xs, xs, ax, None))          # in [1, ~2*sqrt(n)]
     es = jnp.squeeze(es, ax)
     # Reconstruct r * 2**es.  Two exact power-of-two multiplies cover the
     # normal range (split so neither factor over/underflows); ...
@@ -282,7 +298,8 @@ def compensated_norm(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
     k = jnp.round(jnp.where(tiny, t, 0.0)).astype(it)
     nrm = jnp.where(tiny, jax.lax.bitcast_convert_type(k, x.dtype), big)
     nrm = jnp.where(has_inf, jnp.asarray(jnp.inf, nrm.dtype), nrm)
-    return jnp.where(has_nan, jnp.asarray(jnp.nan, nrm.dtype), nrm)
+    return obs.op_end(rec, jnp.where(has_nan, jnp.asarray(jnp.nan, nrm.dtype),
+                                     nrm))
 
 
 # ---------------------------------------------------------------------------

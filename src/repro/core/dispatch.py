@@ -51,6 +51,13 @@ Three concerns, one layer:
      without code changes.  ``choose_route`` consults the table too: an entry
      may pin ``"route": "xla" | "pallas"`` for its shape class, which wins
      over the backend default in ``auto`` mode (explicit modes still win).
+
+  5. **Telemetry** — with ``REPRO_TELEMETRY=counters|trace``
+     (``repro.obs.telemetry``), every entry point records its kind,
+     shape-class, chosen route, plan r/payload_bits, fenced wall time, and
+     the TME-predicted time for the same op; ``get_plan``/``get_tuning``
+     count their cache hits and misses.  Recording is tracer-safe (a jitted
+     caller records nothing) and free when off.
 """
 
 from __future__ import annotations
@@ -66,6 +73,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ozaki2
+from repro.obs import telemetry as obs
 
 MODES = ("auto", "xla", "pallas")
 ENV_VAR = "REPRO_DISPATCH"
@@ -161,6 +169,11 @@ def get_plan(k: int, payload_bits: int = 53, substrate: str = "int8",
     lookups (every policy dot, every VJP re-plan, every CG iteration) return
     the same object without re-running moduli selection or Garner setup.
     """
+    if obs.enabled():
+        before = _cached_plan.cache_info().misses
+        plan = _cached_plan(int(k), int(payload_bits), substrate, r, margin_bits)
+        obs.record_cache("plan", _cached_plan.cache_info().misses == before)
+        return plan
     return _cached_plan(int(k), int(payload_bits), substrate, r, margin_bits)
 
 
@@ -247,8 +260,13 @@ def get_tuning(kind: str, dims: Sequence[int]) -> Dict[str, Any]:
     read-only."""
     if kind not in TUNE_KINDS:
         raise ValueError(f"tuning kind must be one of {TUNE_KINDS}, got {kind!r}")
-    return _cached_tuning(kind, shape_class(dims),
-                          os.environ.get(TUNE_VAR, ""))
+    args = (kind, shape_class(dims), os.environ.get(TUNE_VAR, ""))
+    if obs.enabled():
+        before = _cached_tuning.cache_info().misses
+        tuning = _cached_tuning(*args)
+        obs.record_cache("tune", _cached_tuning.cache_info().misses == before)
+        return tuning
+    return _cached_tuning(*args)
 
 
 def clear_tune_cache() -> None:
@@ -426,11 +444,15 @@ def matmul(a: jax.Array, b: jax.Array, plan: Optional[ozaki2.Plan] = None,
     """
     if plan is None:
         plan = get_plan(a.shape[-1], payload_bits, substrate)
+    kind = _matmul_kind(b.shape[1])
     shape = (a.shape[0], a.shape[1], b.shape[1])
-    if choose_route(plan, _matmul_kind(b.shape[1]), mode,
-                    shape=shape) == "pallas":
-        return _pallas_matmul(a, b, plan)
-    return ozaki2.emulated_matmul(a, b, plan, out_dtype=_working_float())
+    route = choose_route(plan, kind, mode, shape=shape)
+    rec = obs.op_start(kind, shape, route, plan, a, b)
+    if route == "pallas":
+        out = _pallas_matmul(a, b, plan)
+    else:
+        out = ozaki2.emulated_matmul(a, b, plan, out_dtype=_working_float())
+    return obs.op_end(rec, out)
 
 
 def dot(x: jax.Array, w: jax.Array, plan: Optional[ozaki2.Plan] = None,
@@ -461,12 +483,18 @@ def spmv(a_val: jax.Array, a_col: jax.Array, x: jax.Array,
 
     if plan is None:
         plan = get_plan(a_val.shape[1], margin_bits=4)
-    if choose_route(plan, "spmv_bell", mode, shape=a_val.shape) == "pallas":
+    route = choose_route(plan, "spmv_bell", mode, shape=a_val.shape)
+    rec = obs.op_start("spmv_bell",
+                       (a_val.shape[0], a_val.shape[1], x.shape[0]),
+                       route, plan, a_val, a_col, x)
+    if route == "pallas":
         if br is None:
             br = int(get_tuning("spmv_bell", a_val.shape).get("br", 128))
-        return _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep,
-                               br=br, interpret=pallas_interpret("spmv_bell"))
-    return _spmv.spmv_bell_ref(a_val, a_col, x, plan, out_rep=out_rep)
+        out = _spmv.spmv_bell(a_val, a_col, x, plan, out_rep=out_rep,
+                              br=br, interpret=pallas_interpret("spmv_bell"))
+    else:
+        out = _spmv.spmv_bell_ref(a_val, a_col, x, plan, out_rep=out_rep)
+    return obs.op_end(rec, out)
 
 
 def stencil7(u: jax.Array, c: jax.Array, plan: Optional[ozaki2.Plan] = None,
@@ -484,9 +512,13 @@ def stencil7(u: jax.Array, c: jax.Array, plan: Optional[ozaki2.Plan] = None,
 
     if plan is None:
         plan = get_plan(8, margin_bits=4)
-    if choose_route(plan, "stencil7", mode, shape=u.shape) == "pallas":
+    route = choose_route(plan, "stencil7", mode, shape=u.shape)
+    rec = obs.op_start("stencil7", u.shape, route, plan, u, c)
+    if route == "pallas":
         if bz is None:
             bz = int(get_tuning("stencil7", u.shape).get("bz", 8))
-        return _stencil.stencil7(u, c, plan, out_rep=out_rep, bz=bz,
-                                 interpret=pallas_interpret("stencil7"))
-    return _stencil.stencil7_ref(u, c, plan, out_rep=out_rep)
+        out = _stencil.stencil7(u, c, plan, out_rep=out_rep, bz=bz,
+                                interpret=pallas_interpret("stencil7"))
+    else:
+        out = _stencil.stencil7_ref(u, c, plan, out_rep=out_rep)
+    return obs.op_end(rec, out)

@@ -38,8 +38,12 @@ class ChipSpec:
 
     @property
     def native_ridge(self) -> float:
-        """Memory ridge point (FLOPs/Byte) of the native FP64 vector pipe."""
-        return self.fp64_vector / (self.hbm_tbps * 1e3 / 1e3)  # TFLOPS / (TB/s) = F/B
+        """Memory ridge point (FLOPs/Byte) of the native FP64 vector pipe.
+
+        Units: TFLOPS / (TB/s) — the 1e12 factors cancel, leaving FLOPs/Byte
+        directly (e.g. H100: 34 / 3.35 ≈ 10.1 F/B, the paper's Table 2 row).
+        """
+        return self.fp64_vector / self.hbm_tbps
 
     def fp64_matrix_native(self) -> float:
         return self.fp64_tensor if self.fp64_tensor is not None else self.fp64_vector
@@ -128,6 +132,89 @@ def crossover_oi(spec: ChipSpec, params: EmulationParams) -> float:
 def emulation_ridge(spec: ChipSpec, params: EmulationParams) -> float:
     """OI at which the emulated curve leaves the memory roof (its own ridge)."""
     return p_low(spec, params.substrate) / params.alpha / spec.hbm_tbps
+
+
+# ---------------------------------------------------------------------------
+# Per-op cost model for the dispatch seam (the telemetry prediction side)
+# ---------------------------------------------------------------------------
+
+# Chip whose TME prediction the telemetry layer compares measurements against.
+# Default is the repo's actual compile target (TPU v5e); REPRO_TME_CHIP picks
+# any Table-2 entry (e.g. H100) for what-if comparisons.
+CHIP_VAR = "REPRO_TME_CHIP"
+
+
+def default_chip() -> ChipSpec:
+    """ChipSpec named by $REPRO_TME_CHIP (default TPUv5e, the compile target)."""
+    import os
+
+    name = os.environ.get(CHIP_VAR, "TPUv5e")
+    try:
+        return CHIPS[name]
+    except KeyError:
+        raise ValueError(f"{CHIP_VAR} must be one of {sorted(CHIPS)}, "
+                         f"got {name!r}") from None
+
+
+def op_costs(kind: str, dims: Tuple[int, ...]) -> Tuple[float, float, float]:
+    """(W FLOPs, Q HBM bytes, n_out) of one FP64-equivalent dispatched op.
+
+    ``dims`` per kind: gemm/gemv (m, k, n); spmv_bell (M, bw, N); stencil7
+    (X, Y, Z); reduce (n,).  Q assumes 8-byte working floats (the op being
+    *emulated* is FP64 even when the operands arrive in f32 — this is the
+    model's native side, paper eq. (8)'s Q).  For reduce, Q charges the
+    two-stream Dot2 case (the CG driver); one-stream sums overstate Q by 2x,
+    within the model's tolerance.
+    """
+    if kind in ("gemm", "gemv"):
+        m, k, n = (float(d) for d in dims)
+        return 2.0 * m * k * n, 8.0 * (m * k + k * n + m * n), m * n
+    if kind == "spmv_bell":
+        M, bw = float(dims[0]), float(dims[1])
+        N = float(dims[2]) if len(dims) > 2 else M
+        # values + int32 colidx + x gather (~1x cached) + y
+        return 2.0 * M * bw, 8.0 * M * bw + 4.0 * M * bw + 8.0 * N + 8.0 * M, M
+    if kind == "stencil7":
+        npts = float(dims[0]) * float(dims[1]) * float(dims[2])
+        return 14.0 * npts, 16.0 * npts, npts
+    if kind == "reduce":
+        n = float(dims[0])
+        return 2.0 * n, 16.0 * n, 1.0
+    raise ValueError(f"op_costs: unknown kind {kind!r}")
+
+
+# Compensated BLAS-1: ~5 vector-pipe flops per plain flop (two_prod + the
+# two_sum tree), β = 1 (one streaming pass), no Garner term — §7.1(a)'s
+# "healthy vector pipe" path, charged against the bf16 rate as its proxy.
+REDUCE_EFT_ALPHA = 5.0
+
+
+def predict_op_time(kind: str, dims: Tuple[int, ...], r: int = 10,
+                    alpha: Optional[float] = None, substrate: str = "int8",
+                    route: str = "xla",
+                    spec: Optional[ChipSpec] = None) -> float:
+    """TME-predicted seconds for one dispatched op (paper eq. (9) pointed at
+    our own kernels — the falsifiability instrument the telemetry layer
+    compares wall-clock against).
+
+    ``route`` sets β: the fused pallas kernels keep residues on-chip (β = 1);
+    the unfused xla references materialise r residue planes (β = r).  γ is the
+    ``garner_gamma`` model at this r.  The reduce kind has no emulation at
+    all: α is the EFT flop multiplier, β = 1, γ = 0.
+    """
+    if spec is None:
+        spec = default_chip()
+    W, Q, n_out = op_costs(kind, dims)
+    if kind == "reduce":
+        params = EmulationParams(alpha=REDUCE_EFT_ALPHA, beta=1.0,
+                                 gamma=0.0, substrate="bf16")
+        return emulated_time(W, Q, 0.0, spec, params)
+    if alpha is None:
+        alpha = float(r) if substrate == "int8" else 3.0 * r
+    beta = 1.0 if route == "pallas" else float(r)
+    params = EmulationParams(alpha=float(alpha), beta=beta,
+                             gamma=garner_gamma(spec, r), substrate=substrate)
+    return emulated_time(W, Q, n_out, spec, params)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compensated, dispatch, ozaki2
+from repro.obs import telemetry as obs
 
 
 @dataclasses.dataclass
@@ -60,6 +61,10 @@ def cg_solve(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
 
     history: List[float] = [float(jnp.sqrt(rs) / bnorm)]
     history_plain: List[float] = []
+    # Residual-trace telemetry: one event per recorded residual (iteration 0
+    # included), so convergence trajectories are observable alongside the
+    # per-op seam events the matvec itself records.
+    obs.record_event("solver.cg", dims=b.shape, iter=0, rel_residual=history[0])
     if record_plain:
         history_plain.append(float(jnp.sqrt(jnp.dot(r, r)) / bnorm_plain))
     it = 0
@@ -70,6 +75,8 @@ def cg_solve(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
         r = r - alpha * ap
         rs_new = dot(r, r)
         history.append(float(jnp.sqrt(rs_new) / bnorm))
+        obs.record_event("solver.cg", dims=b.shape, iter=it,
+                         rel_residual=history[-1])
         if record_plain:
             history_plain.append(float(jnp.sqrt(jnp.dot(r, r)) / bnorm_plain))
         if history[-1] < tol:

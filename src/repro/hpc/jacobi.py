@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compensated, dispatch, ozaki2
+from repro.obs import telemetry as obs
 
 
 def laplacian_coeffs(spacings: Optional[Sequence[float]] = None) -> jax.Array:
@@ -105,6 +106,7 @@ def jacobi_solve(f: jax.Array,
     r = residual(u)
     rel = float(compensated.compensated_norm(r)) / fnorm
     history: List[float] = [rel]
+    obs.record_event("solver.jacobi", dims=f.shape, iter=0, rel_residual=rel)
     if rel < tol:
         return JacobiResult(u, 0, rel, True, history)
 
@@ -115,6 +117,8 @@ def jacobi_solve(f: jax.Array,
         if it % check_every == 0 or it == maxiter:
             rel = float(compensated.compensated_norm(r)) / fnorm
             history.append(rel)
+            obs.record_event("solver.jacobi", dims=f.shape, iter=it,
+                             rel_residual=rel)
             if rel < tol:
                 return JacobiResult(u, it, rel, True, history)
     return JacobiResult(u, it, history[-1], False, history)

@@ -1,0 +1,31 @@
+"""Observability: seam telemetry (measured-vs-TME) for the dispatch layer.
+
+``repro.obs.telemetry`` records per-op events at the dispatch seam, the
+compensated reductions, the iterative solvers, and the serving engine;
+``repro.obs.report`` turns the counters into the measured-vs-TME-predicted
+table (``python -m repro.obs.report``).  Controlled by
+``REPRO_TELEMETRY=off|counters|trace`` or ``telemetry_scope(...)``.
+"""
+
+from repro.obs.telemetry import (  # noqa: F401
+    ENV_VAR,
+    MODES,
+    TRACE_CAP,
+    OpEvent,
+    cache_snapshot,
+    counters_snapshot,
+    enabled,
+    get_mode,
+    op_end,
+    op_start,
+    probe,
+    record_cache,
+    record_event,
+    reset,
+    set_mode,
+    snapshot,
+    telemetry_scope,
+    trace_snapshot,
+    tracing,
+    write_json,
+)

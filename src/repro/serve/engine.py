@@ -9,11 +9,18 @@
   * ``ContinuousBatcher`` — slot-based request scheduler: finished sequences
     release their cache slot to queued requests between steps (the vLLM-style
     loop, with per-slot position counters).
+
+With ``REPRO_TELEMETRY`` on (``repro.obs.telemetry``), the engine records
+per-step serving events: ``serve.prefill`` (wall μs + tokens/sec per prompt),
+``serve.decode`` (wall μs + tokens/sec per batched step), and
+``serve.queue`` (queue depth / active slots per scheduler step) — alongside
+the per-matmul seam events the model's dispatch calls record on their own.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -22,6 +29,7 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.models.transformer import Model
+from repro.obs import telemetry as obs
 
 Pytree = Any
 
@@ -64,6 +72,7 @@ class ServeEngine:
         Single-slot prefill via the decode path keeps cache semantics identical
         for every mixer kind (attention ring buffers and SSM states alike).
         """
+        t0 = time.perf_counter() if obs.enabled() else None
         last = 0
         for t, tok in enumerate(prompt):
             tokens = np.zeros((self.slots, 1), np.int32)
@@ -73,13 +82,27 @@ class ServeEngine:
                 jnp.asarray(t, jnp.int32))
             last = int(jnp.argmax(logits[slot, 0]))
         self.pos[slot] = len(prompt)
+        if t0 is not None:
+            dt = time.perf_counter() - t0
+            obs.record_event("serve.prefill", us=dt * 1e6,
+                             route=self.dispatch_mode or "",
+                             tokens=len(prompt), slot=slot,
+                             tokens_per_s=len(prompt) / max(dt, 1e-9))
         return last
 
     def decode_step_all(self, tokens: np.ndarray, pos: int) -> np.ndarray:
+        t0 = time.perf_counter() if obs.enabled() else None
         logits, self.cache = self._decode_call(
             self.params, self.cache, jnp.asarray(tokens.reshape(-1, 1)),
             jnp.asarray(pos, jnp.int32))
-        return np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        out = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        if t0 is not None:
+            dt = time.perf_counter() - t0
+            obs.record_event("serve.decode", us=dt * 1e6,
+                             route=self.dispatch_mode or "",
+                             batch=self.slots,
+                             tokens_per_s=self.slots / max(dt, 1e-9))
+        return out
 
 
 @dataclasses.dataclass
@@ -102,6 +125,8 @@ class ContinuousBatcher:
 
     def step(self) -> List[Request]:
         """One engine step; returns requests that finished this step."""
+        obs.record_event("serve.queue", queued=len(self.queue),
+                         active=len(self.active))
         self._admit()
         if not self.active:
             return []

@@ -99,7 +99,8 @@ def test_committed_baseline_covers_ci_smoke_sections():
     """benchmarks/baseline.json (the committed trajectory anchor) must have
     rows for every section the CI fast lane runs with --json."""
     baseline = json.loads((REPO_ROOT / "benchmarks" / "baseline.json").read_text())
-    for section in ("table1", "dispatch", "spectral", "kernels", "reductions"):
+    for section in ("table1", "dispatch", "spectral", "kernels", "reductions",
+                    "telemetry"):
         assert section in baseline, f"baseline missing section {section}"
     # table1 is derived-only (model rows, us == 0) and legitimately empty;
     # the empirical sections must carry timing rows.
@@ -129,3 +130,95 @@ def test_run_json_writer_skips_derived_only_rows(tmp_path):
                          capture_output=True, text=True, check=True)
     assert json.loads(out.stdout.strip()) == {"k/f64/beta": 12.34}
     assert (tmp_path / "BENCH_kernels.json").exists()
+
+
+def test_run_json_writer_self_describing_rows(tmp_path):
+    """5-tuple rows (route/shape_class provenance) serialise as objects; bare
+    3-tuple rows stay plain floats — both in the same section."""
+    code = (
+        "import json\n"
+        "from benchmarks.run import write_json\n"
+        "rows = [('d/route_xla/us', 9.5, 1.0, 'xla', '128x256x128'),\n"
+        "        ('d/plain/us', 3.25, 0.0)]\n"
+        f"p = write_json('dispatch', rows, {str(tmp_path)!r})\n"
+        "print(json.dumps(json.load(open(p))))\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], cwd=REPO_ROOT,
+                         capture_output=True, text=True, check=True)
+    assert json.loads(out.stdout.strip()) == {
+        "d/route_xla/us": {"us": 9.5, "route": "xla",
+                           "shape_class": "128x256x128"},
+        "d/plain/us": 3.25,
+    }
+
+
+# --- self-describing rows through compare / write-baseline -------------------
+
+def test_us_accepts_float_and_object_rows():
+    assert check_regression._us(12.5) == 12.5
+    assert check_regression._us({"us": 7.0, "route": "xla"}) == 7.0
+    assert check_regression._us({}) == 0.0
+
+
+def test_compare_handles_object_rows():
+    baseline = {"telemetry": {"t/gemm_xla/us": 100.0}}
+    current = {"t/gemm_xla/us": {"us": 300.0, "route": "xla",
+                                 "shape_class": "64x64x64"}}
+    out = list(check_regression.compare("telemetry", current, baseline, 2.0))
+    assert [k for k, _ in out] == ["warning"]
+    assert "3.00x" in out[0][1]
+
+
+def test_write_baseline_normalises_object_rows(tmp_path):
+    run = _write(tmp_path / "BENCH_telemetry.json",
+                 {"t/a/us": {"us": 5.5, "route": "pallas",
+                             "shape_class": "8x8x8"},
+                  "t/b/us": 2.0})
+    baseline = tmp_path / "baseline.json"
+    assert check_regression.main(
+        [run, "--baseline", str(baseline), "--write-baseline"]) == 0
+    written = json.loads(baseline.read_text())
+    assert written == {"telemetry": {"t/a/us": 5.5, "t/b/us": 2.0}}
+
+
+# --- telemetry measured-vs-TME audit -----------------------------------------
+
+def _telemetry_snapshot(ratio: float) -> dict:
+    return {"chip": "TPUv5e",
+            "counters": [
+                {"kind": "gemm", "shape_class": "64x64x64", "route": "xla",
+                 "calls": 3, "us": 100.0 * ratio, "tme_us": 100.0},
+                {"kind": "solver.cg", "shape_class": "64", "route": "",
+                 "calls": 5, "us": 40.0, "tme_us": 0.0},   # no prediction
+            ]}
+
+
+def test_audit_telemetry_flags_only_beyond_threshold():
+    over = list(check_regression.audit_telemetry(_telemetry_snapshot(50.0),
+                                                 10.0))
+    assert len(over) == 1
+    assert "gemm/xla" in over[0] and "50.0x" in over[0]
+    assert "solver.cg" not in " ".join(over)   # prediction-free kinds skipped
+    under = list(check_regression.audit_telemetry(_telemetry_snapshot(5.0),
+                                                  10.0))
+    assert under == []
+
+
+def test_main_telemetry_notices_and_env_threshold(tmp_path, capsys,
+                                                  monkeypatch):
+    run = _write(tmp_path / "BENCH_telemetry.json", {"t/gemm_xla/us": 1.0})
+    base = _write(tmp_path / "baseline.json", {"telemetry":
+                                               {"t/gemm_xla/us": 1.0}})
+    snap = _write(tmp_path / "telemetry.json", _telemetry_snapshot(50.0))
+
+    assert check_regression.main(
+        [run, "--baseline", base, "--telemetry", snap]) == 0
+    out = capsys.readouterr().out
+    assert "::notice title=TME model error::" in out
+    assert "gemm/xla" in out and "> 10x" in out
+
+    # env-overridable threshold: 100x silences the 50x ratio
+    monkeypatch.setenv(check_regression.NOTICE_RATIO_VAR, "100")
+    assert check_regression.main(
+        [run, "--baseline", base, "--telemetry", snap]) == 0
+    assert "TME model error" not in capsys.readouterr().out

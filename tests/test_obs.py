@@ -1,0 +1,336 @@
+"""Telemetry subsystem tests: mode resolution, recording tiers, tracer safety
+(the instrumented entry points must still jit, bit-identically), cache
+counters, solver residual traces, serving events, and the report/probe
+surfaces."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compensated, dispatch, ozaki2
+from repro.hpc import cg, jacobi
+from repro.obs import report, telemetry as obs
+
+
+@pytest.fixture(autouse=True)
+def clean_telemetry(monkeypatch):
+    """Every test starts with empty stores, no TLS override, and no ambient
+    REPRO_TELEMETRY leaking in from the environment."""
+    monkeypatch.delenv(obs.ENV_VAR, raising=False)
+    obs.set_mode(None)
+    obs.reset()
+    yield
+    obs.set_mode(None)
+    obs.reset()
+
+
+def _rng():
+    return np.random.default_rng(0)
+
+
+def _gemm_operands(n=32):
+    rng = _rng()
+    return (jnp.asarray(rng.standard_normal((n, n))),
+            jnp.asarray(rng.standard_normal((n, n))))
+
+
+# --- mode resolution ---------------------------------------------------------
+
+def test_mode_default_off():
+    assert obs.get_mode() == "off"
+    assert not obs.enabled()
+    assert not obs.tracing()
+
+
+def test_mode_from_env(monkeypatch):
+    monkeypatch.setenv(obs.ENV_VAR, "counters")
+    assert obs.get_mode() == "counters"
+    assert obs.enabled()
+    assert not obs.tracing()
+
+
+def test_mode_env_invalid_raises(monkeypatch):
+    monkeypatch.setenv(obs.ENV_VAR, "loud")
+    with pytest.raises(ValueError, match="telemetry mode"):
+        obs.get_mode()
+
+
+def test_set_mode_overrides_env(monkeypatch):
+    monkeypatch.setenv(obs.ENV_VAR, "trace")
+    obs.set_mode("off")
+    assert obs.get_mode() == "off"
+    obs.set_mode(None)
+    assert obs.get_mode() == "trace"
+
+
+def test_scope_nests_and_restores():
+    with obs.telemetry_scope("counters"):
+        assert obs.get_mode() == "counters"
+        with obs.telemetry_scope("trace"):
+            assert obs.tracing()
+        with obs.telemetry_scope(None):      # None inherits
+            assert obs.get_mode() == "counters"
+        assert obs.get_mode() == "counters"
+    assert obs.get_mode() == "off"
+
+
+def test_scope_invalid_mode_raises():
+    with pytest.raises(ValueError):
+        with obs.telemetry_scope("verbose"):
+            pass
+
+
+# --- recording tiers ---------------------------------------------------------
+
+def test_off_records_nothing():
+    a, b = _gemm_operands()
+    dispatch.matmul(a, b, mode="xla")
+    assert obs.counters_snapshot() == {}
+    assert obs.trace_snapshot() == []
+    assert obs.cache_snapshot() == {}
+
+
+def test_counters_mode_aggregates_without_trace():
+    a, b = _gemm_operands()
+    with obs.telemetry_scope("counters"):
+        dispatch.matmul(a, b, mode="xla")
+        dispatch.matmul(a, b, mode="xla")
+    counters = obs.counters_snapshot()
+    key = ("gemm", dispatch.shape_class((32, 32, 32)), "xla")
+    assert key in counters
+    agg = counters[key]
+    assert agg["calls"] == 2
+    assert agg["us"] > 0.0
+    assert agg["us_min"] <= agg["us_max"] <= agg["us"]
+    assert agg["flops"] == pytest.approx(2 * 2.0 * 32 ** 3)
+    assert agg["tme_us"] > 0.0
+    assert obs.trace_snapshot() == []        # ring only fills in trace mode
+
+
+def test_trace_mode_fills_ring_with_plan_fields():
+    a, b = _gemm_operands()
+    with obs.telemetry_scope("trace"):
+        dispatch.matmul(a, b, mode="xla")
+    (ev,) = [e for e in obs.trace_snapshot() if e.kind == "gemm"]
+    plan = dispatch.get_plan(32)
+    assert ev.route == "xla"
+    assert ev.r == plan.r
+    assert ev.payload_bits == plan.payload_bits
+    assert ev.us > 0.0 and ev.tme_us > 0.0
+    assert ev.shape_class == dispatch.shape_class((32, 32, 32))
+
+
+def test_all_dispatch_kinds_record(tmp_path):
+    rng = _rng()
+    a, b = _gemm_operands()
+    v = jnp.asarray(rng.standard_normal((32, 2)))
+    u = jnp.asarray(rng.standard_normal((8, 8, 8)))
+    c = jnp.asarray(np.array([6.0, -1, -1, -1, -1, -1, -1]))
+    plan_r7 = ozaki2.make_plan(4, payload_bits=24, margin_bits=4)
+    val = jnp.asarray(rng.standard_normal((32, 4)))
+    col = jnp.asarray(rng.integers(0, 32, (32, 4)).astype(np.int32))
+    x = jnp.asarray(rng.standard_normal(32))
+    with obs.telemetry_scope("counters"):
+        dispatch.matmul(a, b, mode="xla")
+        dispatch.matmul(a, v, mode="xla")
+        dispatch.stencil7(u, c, bz=4, mode="xla")
+        dispatch.spmv(val, col, x, plan=plan_r7, br=8, mode="xla")
+        compensated.compensated_dot(x, x)
+    kinds = {k for (k, _, _) in obs.counters_snapshot()}
+    assert {"gemm", "gemv", "stencil7", "spmv_bell", "reduce"} <= kinds
+
+
+def test_reduce_labels_cover_sum_dot_norm():
+    x = jnp.asarray(_rng().standard_normal(256), jnp.float32)
+    with obs.telemetry_scope("trace"):
+        compensated.neumaier_sum(x)
+        compensated.compensated_dot(x, x)
+        compensated.compensated_norm(x)
+    labels = [e.label for e in obs.trace_snapshot() if e.kind == "reduce"]
+    # norm must record exactly one event (not a nested dot2 as well)
+    assert labels == ["sum2", "dot2", "nrm2"]
+
+
+def test_reset_clears_everything():
+    a, b = _gemm_operands()
+    with obs.telemetry_scope("trace"):
+        dispatch.matmul(a, b, mode="xla")
+        obs.record_event("custom", us=1.0)
+    obs.reset()
+    assert obs.counters_snapshot() == {}
+    assert obs.trace_snapshot() == []
+    assert obs.cache_snapshot() == {}
+
+
+# --- tracer safety (satellite: bit-identity under jit) -----------------------
+
+@pytest.mark.parametrize("op", ["matmul", "spmv", "stencil7", "dot"])
+def test_jit_bit_identical_and_silent(op):
+    """Under jax.jit with telemetry on: nothing is recorded (operands are
+    tracers) and the result is bit-identical to telemetry off."""
+    rng = _rng()
+    if op == "matmul":
+        a, b = _gemm_operands()
+        fn = jax.jit(lambda a, b: dispatch.matmul(a, b, mode="xla"))
+        args = (a, b)
+    elif op == "spmv":
+        plan_r7 = ozaki2.make_plan(4, payload_bits=24, margin_bits=4)
+        val = jnp.asarray(rng.standard_normal((32, 4)))
+        col = jnp.asarray(rng.integers(0, 32, (32, 4)).astype(np.int32))
+        x = jnp.asarray(rng.standard_normal(32))
+        fn = jax.jit(lambda val, col, x: dispatch.spmv(
+            val, col, x, plan=plan_r7, br=8, mode="xla"))
+        args = (val, col, x)
+    elif op == "stencil7":
+        u = jnp.asarray(rng.standard_normal((8, 8, 8)))
+        c = jnp.asarray(np.array([6.0, -1, -1, -1, -1, -1, -1]))
+        fn = jax.jit(lambda u, c: dispatch.stencil7(u, c, bz=4, mode="xla"))
+        args = (u, c)
+    else:
+        x = jnp.asarray(rng.standard_normal(512), jnp.float32)
+        fn = jax.jit(compensated.compensated_dot)
+        args = (x, x)
+
+    ref = jax.block_until_ready(fn(*args))        # telemetry off
+    obs.reset()
+    with obs.telemetry_scope("trace"):
+        out = jax.block_until_ready(fn(*args))
+        assert obs.counters_snapshot() == {}, "jitted call must record nothing"
+        assert obs.trace_snapshot() == []
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_record_event_drops_tracer_payloads():
+    @jax.jit
+    def f(x):
+        obs.record_event("inside", value=x)      # x is a tracer here
+        return x * 2
+    with obs.telemetry_scope("trace"):
+        f(jnp.ones(4))
+    assert all(e.kind != "inside" for e in obs.trace_snapshot())
+
+
+# --- cache counters ----------------------------------------------------------
+
+def test_plan_and_tune_cache_counters():
+    dispatch.clear_plan_cache()
+    dispatch.clear_tune_cache()
+    with obs.telemetry_scope("counters"):
+        dispatch.get_plan(24)
+        dispatch.get_plan(24)
+        dispatch.get_tuning("gemm", (16, 24, 16))
+        dispatch.get_tuning("gemm", (16, 24, 16))
+    caches = obs.cache_snapshot()
+    assert caches["plan"] == (1, 1)              # (hits, misses)
+    assert caches["tune"] == (1, 1)
+
+
+# --- solver residual traces --------------------------------------------------
+
+def test_cg_residual_trace_matches_history():
+    rng = _rng()
+    n = 12
+    m = rng.standard_normal((n, n))
+    a = jnp.asarray(m @ m.T + n * np.eye(n))
+    b = jnp.asarray(rng.standard_normal(n))
+    with obs.telemetry_scope("trace"):
+        res = cg.cg_solve_dense(a, b, tol=1e-10, maxiter=2 * n, mode="xla",
+                                record_plain=False)
+    events = [e for e in obs.trace_snapshot() if e.kind == "solver.cg"]
+    assert len(events) == len(res.history)
+    iters = [dict(e.extra)["iter"] for e in events]
+    assert iters == list(range(len(res.history)))
+    rels = [dict(e.extra)["rel_residual"] for e in events]
+    assert rels == pytest.approx(res.history)
+
+
+def test_jacobi_residual_trace_matches_history():
+    rng = _rng()
+    f = jnp.asarray(rng.standard_normal((6, 6, 6)))
+    with obs.telemetry_scope("trace"):
+        res = jacobi.jacobi_solve(f, tol=1e-6, maxiter=50, mode="xla",
+                                  check_every=5)
+    events = [e for e in obs.trace_snapshot() if e.kind == "solver.jacobi"]
+    assert len(events) == len(res.history)
+    assert dict(events[0].extra)["rel_residual"] == pytest.approx(
+        res.history[0])
+
+
+# --- serving events ----------------------------------------------------------
+
+def test_serve_engine_records_step_events():
+    from repro.configs import registry
+    from repro.models.transformer import Model
+    from repro.serve.engine import ContinuousBatcher, Request, ServeEngine
+
+    cfg = registry.get_config("yi-6b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=2, max_seq=32)
+    cb = ContinuousBatcher(eng)
+    rng = _rng()
+    with obs.telemetry_scope("trace"):
+        cb.submit(Request(uid=0, max_new_tokens=2, prompt=rng.integers(
+            0, cfg.vocab_size, 3).astype(np.int32)))
+        done = cb.run_to_completion(max_steps=20)
+    assert len(done) == 1
+    events = obs.trace_snapshot()
+    prefill = [e for e in events if e.kind == "serve.prefill"]
+    decode = [e for e in events if e.kind == "serve.decode"]
+    queue = [e for e in events if e.kind == "serve.queue"]
+    assert len(prefill) == 1
+    assert dict(prefill[0].extra)["tokens"] == 3
+    assert prefill[0].us > 0.0
+    assert dict(prefill[0].extra)["tokens_per_s"] > 0.0
+    assert len(decode) >= 1 and all(e.us > 0.0 for e in decode)
+    assert dict(queue[0].extra) == {"queued": 1, "active": 0}
+
+
+# --- report / probe / snapshot -----------------------------------------------
+
+def test_report_rows_and_render():
+    a, b = _gemm_operands()
+    with obs.telemetry_scope("counters"):
+        dispatch.matmul(a, b, mode="xla")
+        obs.record_event("solver.cg", dims=(16,), iter=0, rel_residual=1.0)
+    rows = report.table_rows()
+    by_kind = {r["kind"]: r for r in rows}
+    assert by_kind["gemm"]["ratio"] > 0.0
+    assert by_kind["solver.cg"]["ratio"] == 0.0   # no TME prediction
+    text = report.render(rows, chip="TPUv5e")
+    assert "gemm" in text and "TPUv5e" in text
+
+
+def test_probe_returns_route_event():
+    a, b = _gemm_operands()
+    out, ev = obs.probe(lambda: dispatch.matmul(a, b, mode="pallas"))
+    assert ev is not None
+    assert ev.route == "pallas" and ev.kind == "gemm"
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(dispatch.matmul(a, b, mode="xla")))
+    assert obs.get_mode() == "off"                # probe restores the mode
+
+
+def test_probe_no_dispatch_returns_none():
+    out, ev = obs.probe(lambda: jnp.ones(3) * 2)
+    assert ev is None
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones(3))
+
+
+def test_snapshot_json_roundtrip_and_report_main(tmp_path, capsys):
+    a, b = _gemm_operands()
+    with obs.telemetry_scope("trace"):
+        dispatch.matmul(a, b, mode="xla")
+        path = obs.write_json(str(tmp_path / "telemetry.json"))
+    snap = json.loads((tmp_path / "telemetry.json").read_text())
+    assert snap["mode"] == "trace"
+    assert snap["counters"] and snap["trace"]
+    assert snap["chip"] in ("TPUv5e", "H100", "B200", "B300", "R200")
+    assert report.main([path]) == 0
+    assert "gemm" in capsys.readouterr().out
+    assert report.main([path, "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)
+    assert rows[0]["kind"] == "gemm"

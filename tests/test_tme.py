@@ -160,3 +160,58 @@ def test_fft_emulated_beats_native_on_post_fp64_chips():
         nat = tme.fft_native_time(1 << 18, spec, batch=4096)
         emu = tme.fft_emulated_time(1 << 18, spec, params, batch=4096)
         assert (nat / emu > 1.0) == expect_win
+
+
+# --- native_ridge / telemetry prediction surface -----------------------------
+
+def test_native_ridge_pins_h100_table2_value():
+    """TFLOPS / (TB/s): the 1e12s cancel, leaving FLOPs/Byte — H100's Table 2
+    ridge is 34/3.35 ≈ 10.1 F/B (regression pin for the old unit-fudge bug)."""
+    assert tme.H100.native_ridge == pytest.approx(34 / 3.35)
+    assert tme.H100.native_ridge == pytest.approx(10.1, abs=0.1)
+    for spec in tme.CHIPS.values():
+        assert spec.native_ridge == pytest.approx(
+            spec.fp64_vector / spec.hbm_tbps)
+
+
+def test_default_chip_env_selection(monkeypatch):
+    monkeypatch.delenv(tme.CHIP_VAR, raising=False)
+    assert tme.default_chip().name == "TPUv5e"
+    monkeypatch.setenv(tme.CHIP_VAR, "H100")
+    assert tme.default_chip() is tme.H100
+    monkeypatch.setenv(tme.CHIP_VAR, "Z9000")
+    with pytest.raises(ValueError, match="REPRO_TME_CHIP"):
+        tme.default_chip()
+
+
+def test_op_costs_per_kind():
+    assert tme.op_costs("gemm", (4, 5, 6)) == (240.0, 8.0 * (20 + 30 + 24),
+                                               24.0)
+    assert tme.op_costs("gemv", (4, 5, 1)) == (40.0, 8.0 * (20 + 5 + 4), 4.0)
+    W, Q, n_out = tme.op_costs("spmv_bell", (8, 4, 16))
+    assert (W, n_out) == (64.0, 8.0)
+    assert Q == 8 * 4 * 8 + 8 * 4 * 4 + 16 * 8 + 8 * 8
+    W, Q, n_out = tme.op_costs("stencil7", (2, 3, 4))
+    assert (W, Q, n_out) == (14.0 * 24, 16.0 * 24, 24.0)
+    assert tme.op_costs("reduce", (100,)) == (200.0, 1600.0, 1.0)
+    with pytest.raises(ValueError):
+        tme.op_costs("fft", (8,))
+
+
+def test_predict_op_time_route_beta_ordering():
+    """xla (unfused, β = r) must predict ≥ pallas (fused, β = 1) for the same
+    op on a memory-ridge-bound chip, and both must be positive and finite."""
+    dims = (128, 256, 128)
+    t_xla = tme.predict_op_time("gemm", dims, r=15, route="xla",
+                                spec=tme.TPU_V5E)
+    t_pal = tme.predict_op_time("gemm", dims, r=15, route="pallas",
+                                spec=tme.TPU_V5E)
+    assert 0.0 < t_pal < t_xla
+
+
+def test_predict_op_time_reduce_has_no_garner_term():
+    """reduce is the §7.1(a) EFT path: no emulation, so prediction scales
+    linearly in n (γ = 0 — no per-output reconstruction offset)."""
+    t1 = tme.predict_op_time("reduce", (1 << 12,), spec=tme.TPU_V5E)
+    t2 = tme.predict_op_time("reduce", (1 << 13,), spec=tme.TPU_V5E)
+    assert t2 == pytest.approx(2 * t1, rel=1e-6)

@@ -52,6 +52,7 @@ def _sections():
         # An import failure here surfaces as the section's ERROR row (exit 1)
         # rather than the section silently vanishing from the registry.
         "kernels": _section("kernels", "all_kernels"),
+        "attention": _section("attention", "attention_section"),
         "reductions": _section("reductions", "reductions_section"),
         "models": _section("models", "smoke_step_timings"),
         "telemetry": _section("telemetry", "telemetry_section"),

@@ -5,7 +5,7 @@ Unlike the other sections, nothing here is timed by hand: every op runs under
 ``REPRO_TELEMETRY`` trace scope and the wall-clock comes from the telemetry
 counters themselves (``block_until_ready``-fenced inside ``obs.op_end``), so
 this section exercises the recording path end to end while producing the
-measured-vs-TME table for all four fused kinds + reduce, on *both* routes.
+measured-vs-TME table for all five fused kinds + reduce, on *both* routes.
 
 CSV rows (name,us_per_call,derived,route,shape_class):
   telemetry/<kind>_<route>/us — mean measured μs per call from the counters;
@@ -56,6 +56,10 @@ def _workloads():
     x = jnp.asarray(rng.standard_normal(256))
     d1 = jnp.asarray(rng.standard_normal(4096))
     d2 = jnp.asarray(rng.standard_normal(4096))
+    q = jnp.asarray(rng.standard_normal((32, 16)))
+    kk = jnp.asarray(rng.standard_normal((32, 16)))
+    vv = jnp.asarray(rng.standard_normal((32, 16)))
+    causal = jnp.tril(jnp.ones((32, 32), jnp.int8))
 
     work = []
     for mode in ("xla", "pallas"):
@@ -67,6 +71,8 @@ def _workloads():
                      reps))
         work.append((lambda mode=mode: dispatch.spmv(
             val, col, x, plan=plan_r7, br=128, mode=mode), reps))
+        work.append((lambda mode=mode: dispatch.attention(
+            q, kk, vv, mask=causal, mode=mode), reps))
     work.append((lambda: compensated.compensated_dot(d1, d2), _REPS))
     return work
 

@@ -80,8 +80,9 @@ ENV_VAR = "REPRO_DISPATCH"
 TUNE_VAR = "REPRO_TUNE"
 
 # Fused-kernel kinds the router understands.  "gemm"/"gemv" share the matmul
-# entry point (split on RHS width); "spmv_bell" and "stencil7" have their own.
-KINDS = ("gemm", "gemv", "spmv_bell", "stencil7")
+# entry point (split on RHS width); "spmv_bell", "stencil7", and "attention"
+# (the fused online-softmax scan) have their own.
+KINDS = ("gemm", "gemv", "spmv_bell", "stencil7", "attention")
 
 # Kinds the autotuning table covers: the fused-kernel kinds plus the
 # blocked-EFT compensated reductions (no fused Pallas kernel yet — the blocked
@@ -98,6 +99,7 @@ AUTO_ROUTE = {
     "gemv": {"tpu": "pallas", "default": "xla"},
     "spmv_bell": {"tpu": "pallas", "default": "xla"},
     "stencil7": {"tpu": "pallas", "default": "xla"},
+    "attention": {"tpu": "pallas", "default": "xla"},
     "reduce": {"default": "xla"},
 }
 
@@ -183,6 +185,7 @@ def plan_cache_info():
 
 
 def clear_plan_cache() -> None:
+    """Drop every memoised Plan (tests that vary moduli/payload per case)."""
     _cached_plan.cache_clear()
 
 
@@ -200,6 +203,7 @@ TUNE_TABLE: Dict[Tuple[str, str], Dict[str, Any]] = {
     ("gemv", "*"): {"bm": 128, "bk": 256},
     ("spmv_bell", "*"): {"br": 128},
     ("stencil7", "*"): {"bz": 8},
+    ("attention", "*"): {"bq": 128, "bkv": 128},
     ("reduce", "*"): {"block": 512},
     # Measured on CPU (f64 compensated_dot sweep): short vectors are
     # dispatch-bound and flat across blocks; >=64k-element reductions favor
@@ -522,3 +526,73 @@ def stencil7(u: jax.Array, c: jax.Array, plan: Optional[ozaki2.Plan] = None,
     else:
         out = _stencil.stencil7_ref(u, c, plan, out_rep=out_rep)
     return obs.op_end(rec, out)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              mask: Optional[jax.Array] = None, softcap: float = 0.0,
+              plan_qk: Optional[ozaki2.Plan] = None,
+              plan_pv: Optional[ozaki2.Plan] = None,
+              payload_bits: int = 53, substrate: str = "int8",
+              mode: Optional[str] = None) -> jax.Array:
+    """Fused emulated attention out = softmax(mask(QKᵀ/√D + softcap)) V.
+
+    q: (..., S, D) queries, k/v: (..., T, D) keys/values; leading dims (batch,
+    heads, ...) are flattened and mapped.  ``mask`` is None (attend to all),
+    a shared (S, T) array, or batched (..., S, T); nonzero/True = attend.
+    ``softcap`` > 0 applies the tanh logit cap between scaling and masking
+    (the models' score order).  Returns working-float (..., S, D).
+
+    Routing follows ``choose_route(plan_qk, "attention", mode)``: the pallas
+    route is the FlashAttention-style fused kernel whose QKᵀ and PV products
+    ride the Ozaki-II residue pipeline inside one online-softmax scan; the
+    xla route is the bit-identical ``attention_ref`` composed from the seam
+    GEMMs at the same kv-blocking.  ``plan_qk`` covers the length-D score
+    contraction, ``plan_pv`` the length-bkv probability-value contraction;
+    both resolve from the plan cache when omitted.  Telemetry records the
+    op with a ``prefill`` (S > 1) or ``decode`` (S = 1) label so the two
+    serving shape classes stay distinguishable in the measured-vs-TME table.
+    """
+    from repro.kernels import ozaki_attention as _attn
+
+    lead = q.shape[:-2]
+    S, D = q.shape[-2:]
+    T = k.shape[-2]
+    B = 1
+    for d in lead:
+        B *= int(d)
+    tune = get_tuning("attention", (B, S, D, T))
+    bq = min(_round_up(int(tune.get("bq", 128)), SUBLANE),
+             _round_up(S, SUBLANE))
+    bkv = min(_round_up(int(tune.get("bkv", 128)), SUBLANE),
+              _round_up(T, SUBLANE))
+    if plan_qk is None:
+        plan_qk = get_plan(D, payload_bits, substrate)
+    if plan_pv is None:
+        plan_pv = get_plan(bkv, payload_bits, substrate)
+    route = choose_route(plan_qk, "attention", mode, shape=(B, S, D, T))
+    rec = obs.op_start("attention", (B, S, D, T), route, plan_qk, q, k, v,
+                       label="decode" if S == 1 else "prefill")
+    wf = _working_float()
+    if mask is None:
+        mask = jnp.ones((S, T), jnp.int8)
+    if mask.ndim == 2:
+        mask = jnp.broadcast_to(mask.astype(jnp.int8), (B, S, T))
+    else:
+        mask = mask.astype(jnp.int8).reshape(B, S, T)
+    qf = q.astype(wf).reshape(B, S, D)
+    kf = k.astype(wf).reshape(B, T, D)
+    vf = v.astype(wf).reshape(B, T, D)
+    if route == "pallas":
+        def one(args):
+            qi, ki, vi, mi = args
+            return _attn.attention_fused(
+                qi, ki, vi, mi, plan_qk, plan_pv, softcap=softcap, bq=bq,
+                bkv=bkv, interpret=pallas_interpret("attention"),
+                out_dtype=wf)
+    else:
+        def one(args):
+            qi, ki, vi, mi = args
+            return _attn.attention_ref(qi, ki, vi, mi, plan_qk, plan_pv,
+                                       softcap=softcap, bkv=bkv, out_dtype=wf)
+    out = jax.lax.map(one, (qf, kf, vf, mask))
+    return obs.op_end(rec, out.reshape(lead + (S, D)))

@@ -180,6 +180,18 @@ def op_costs(kind: str, dims: Tuple[int, ...]) -> Tuple[float, float, float]:
     if kind == "reduce":
         n = float(dims[0])
         return 2.0 * n, 16.0 * n, 1.0
+    if kind == "attention":
+        # (B, S, D, T) — B independent rows of S queries against T keys at
+        # head dim D; a bare 3-tuple (S, D, T) means B = 1.  W counts the
+        # QK^T + PV products (2·2·S·T·D each row); Q is the fused-path f64
+        # traffic: q + out (S·D each) and k + v (T·D each); n_out counts the
+        # Garner reconstructions (S·T scores + S·D outputs per row).
+        if len(dims) == 3:
+            dims = (1,) + tuple(dims)
+        B, S, D, T = (float(d) for d in dims)
+        return (4.0 * B * S * T * D,
+                8.0 * B * (2.0 * S * D + 2.0 * T * D),
+                B * S * (T + D))
     raise ValueError(f"op_costs: unknown kind {kind!r}")
 
 
@@ -204,6 +216,10 @@ def predict_op_time(kind: str, dims: Tuple[int, ...], r: int = 10,
     """
     if spec is None:
         spec = default_chip()
+    if kind == "attention":
+        return attention_emulated_time(dims, r=r, alpha=alpha,
+                                       substrate=substrate, route=route,
+                                       spec=spec)
     W, Q, n_out = op_costs(kind, dims)
     if kind == "reduce":
         params = EmulationParams(alpha=REDUCE_EFT_ALPHA, beta=1.0,
@@ -215,6 +231,39 @@ def predict_op_time(kind: str, dims: Tuple[int, ...], r: int = 10,
     params = EmulationParams(alpha=float(alpha), beta=beta,
                              gamma=garner_gamma(spec, r), substrate=substrate)
     return emulated_time(W, Q, n_out, spec, params)
+
+
+def attention_emulated_time(dims: Tuple[int, ...], r: int = 10,
+                            alpha: Optional[float] = None,
+                            substrate: str = "int8", route: str = "xla",
+                            spec: Optional[ChipSpec] = None) -> float:
+    """TME-predicted seconds for the fused attention kind, per route.
+
+    The pallas route is the FlashAttention-style scan: scores and
+    probabilities never leave registers/VMEM, so it is priced like the other
+    fused kernels (β = 1 over the q/k/v/out traffic, γ per reconstruction).
+    The xla reference composes seam GEMMs per kv block and *materialises*
+    the S and P matrices (2·8·B·S·T bytes); that extra traffic is charged
+    on top of the residue-plane β = r multiplier (added as q_scores/r so the
+    β factor restores it to one full f64 pass each way).
+    """
+    if spec is None:
+        spec = default_chip()
+    if len(dims) == 3:
+        dims = (1,) + tuple(dims)
+    B, S, D, T = (float(d) for d in dims)
+    W, Q, n_out = op_costs("attention", dims)
+    if alpha is None:
+        alpha = float(r) if substrate == "int8" else 3.0 * r
+    gamma = garner_gamma(spec, r)
+    if route == "pallas":
+        params = EmulationParams(alpha=float(alpha), beta=1.0, gamma=gamma,
+                                 substrate=substrate)
+        return emulated_time(W, Q, n_out, spec, params)
+    q_scores = 2.0 * 8.0 * B * S * T
+    params = EmulationParams(alpha=float(alpha), beta=float(r), gamma=gamma,
+                             substrate=substrate)
+    return emulated_time(W, Q + q_scores / float(r), n_out, spec, params)
 
 
 # ---------------------------------------------------------------------------

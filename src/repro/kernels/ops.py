@@ -7,12 +7,12 @@ Two tiers of wrapper live here:
     multiples, digit epilogue, exact unscale) around one ``pallas_call``.
     These ARE the pallas route; ``repro.core.dispatch.matmul`` calls them and
     decides ``interpret`` (Mosaic on TPU, interpreter elsewhere).
-  * ``ozaki_spmv_bell`` / ``ozaki_stencil7`` — routed entry points: thin
-    delegates to ``dispatch.spmv`` / ``dispatch.stencil7``, so
-    ``mode_scope`` / ``REPRO_DISPATCH`` flips them between the fused kernel
-    and the bit-identical jnp reference like every other multiplication in
-    the repo.  Route selection (and the interpret flavour of the pallas
-    route) lives in the dispatch layer only.
+  * ``ozaki_spmv_bell`` / ``ozaki_stencil7`` / ``ozaki_attention`` — routed
+    entry points: thin delegates to ``dispatch.spmv`` / ``dispatch.stencil7``
+    / ``dispatch.attention``, so ``mode_scope`` / ``REPRO_DISPATCH`` flips
+    them between the fused kernel and the bit-identical reference like every
+    other multiplication in the repo.  Route selection (and the interpret
+    flavour of the pallas route) lives in the dispatch layer only.
 """
 
 from __future__ import annotations
@@ -118,6 +118,23 @@ def ozaki_stencil7(u: jax.Array, c: jax.Array,
     fused Pallas kernel or the bit-identical jnp reference.
     """
     return dispatch.stencil7(u, c, plan=plan, out_rep=out_rep, bz=bz, mode=mode)
+
+
+def ozaki_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: Optional[jax.Array] = None, softcap: float = 0.0,
+                    plan_qk: Optional[ozaki2.Plan] = None,
+                    plan_pv: Optional[ozaki2.Plan] = None,
+                    mode: Optional[str] = None) -> jax.Array:
+    """Fused emulated attention softmax(mask(QKᵀ/√D)) V, dispatch-routed.
+
+    q: (..., S, D), k/v: (..., T, D), mask: None | (S, T) | (..., S, T)
+    (nonzero = attend).  ``mode`` selects the FlashAttention-style fused
+    Pallas kernel (QKᵀ and PV ride the Ozaki-II residue pipeline inside one
+    online-softmax scan) or the bit-identical reference composed from the
+    seam GEMMs, like every dispatch-seam multiplication.
+    """
+    return dispatch.attention(q, k, v, mask=mask, softcap=softcap,
+                              plan_qk=plan_qk, plan_pv=plan_pv, mode=mode)
 
 
 def ozaki_spmv_bell(a_val: jax.Array, a_col: jax.Array, x: jax.Array,

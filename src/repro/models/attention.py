@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import dispatch
 from repro.core.policy import Policy
 from repro.distributed.annotate import ann
 from repro.models import layers
@@ -78,6 +79,32 @@ def _causal_window_mask(s: int, t: int, window: int, offset: int = 0) -> jax.Arr
     return ok
 
 
+def _emulated_attn(q, k, v, cfg: ModelConfig, mask, dtype) -> jax.Array:
+    """GQA attention through the dispatch seam's fused ``attention`` kind.
+
+    q: (B, S, H, D); k/v: (B, T, Hkv, D); mask: (S, T) shared across the
+    batch (or None = attend to all).  Queries are grouped per KV head and
+    flattened to (B·Hkv·g, S, D) rows so each row is one independent
+    softmax-attention problem for ``dispatch.attention`` — the seam routes it
+    to the fused online-softmax Pallas kernel or the bit-identical reference
+    per ``REPRO_DISPATCH``/``mode_scope``, with softcap/scale/mask order
+    matching the native ``_attn_direct`` path.
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    n = cfg.num_kv_heads
+    g = H // n
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * n * g, S, D)
+    kf = jnp.broadcast_to(jnp.moveaxis(k, 2, 1)[:, :, None],
+                          (B, n, g, T, D)).reshape(B * n * g, T, D)
+    vf = jnp.broadcast_to(jnp.moveaxis(v, 2, 1)[:, :, None],
+                          (B, n, g, T, D)).reshape(B * n * g, T, D)
+    out = dispatch.attention(qf, kf, vf, mask=mask,
+                             softcap=float(cfg.logit_softcap))
+    out = jnp.moveaxis(out.reshape(B, H, S, D), 1, 2)
+    return out.reshape(B, S, H * D).astype(dtype)
+
+
 def _attn_direct(q, k, v, cfg: ModelConfig, window: int, causal: bool,
                  dtype) -> jax.Array:
     scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
@@ -137,7 +164,14 @@ def attn_apply(params: Dict, x: jax.Array, cfg: ModelConfig, policy: Policy,
         q = layers.apply_rope(q, sin, cos)
         k = layers.apply_rope(k, sin, cos)
     S = q.shape[1]
-    if causal and cfg.attn_chunk and S > cfg.attn_chunk and \
+    if policy.is_emulated:
+        # Paper-faithful policies put the whole score path on the dispatch
+        # seam (kind "attention"): fused online-softmax scan or bit-identical
+        # reference per the ambient mode, instead of the native einsum paths.
+        mask = (_causal_window_mask(S, k.shape[1], window) if causal
+                else jnp.ones((S, k.shape[1]), jnp.bool_))
+        attn_out = _emulated_attn(q, k, v, cfg, mask, x.dtype)
+    elif causal and cfg.attn_chunk and S > cfg.attn_chunk and \
             S % cfg.attn_chunk == 0:
         attn_out = _attn_chunked(q, k, v, cfg, window, x.dtype,
                                  cfg.attn_chunk, cfg.force_unroll)
@@ -150,6 +184,9 @@ def cross_attn_apply(params: Dict, x: jax.Array, enc_out: jax.Array,
                      cfg: ModelConfig, policy: Policy) -> jax.Array:
     """Encoder-decoder cross attention (no RoPE, no mask)."""
     q, k, v = _qkv(params, x, enc_out, cfg, policy)
+    if policy.is_emulated:
+        attn_out = _emulated_attn(q, k, v, cfg, None, x.dtype)
+        return layers.dense_apply(params["wo"], attn_out, policy)
     scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     return layers.dense_apply(params["wo"], _gqa_out(probs, v, cfg), policy)
@@ -200,12 +237,28 @@ def attn_decode_step(params: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
     sel = (jnp.arange(cap) == slot).astype(cache["k"].dtype)[None, :, None, None]
     ck = cache["k"] * (1 - sel) + k.astype(cache["k"].dtype) * sel
     cv = cache["v"] * (1 - sel) + v.astype(cache["v"].dtype) * sel
+    # slot j holds absolute position p_j = j + cap * floor over ring history;
+    # valid iff p_j <= pos and pos - p_j < cap (ring) and p_j within window.
+    j = jnp.arange(cap)
+    # absolute position currently stored in slot j:
+    pj = jnp.where(j <= slot, pos - slot + j, pos - slot + j - cap)
+    ok = (pj >= 0) & (pj <= pos)
+    if window > 0:
+        ok &= (pos - pj) < window
     # Long-context (batch=1) decode: keep the cache sequence-sharded through
     # the attention math (partial softmax reductions are tiny vs gathering the
     # cache — §Perf H2 measured 248 GB/step otherwise).  Only applied when the
     # launcher installs a "kvseq" mapping: a PartitionSpec None dim *forces*
     # replication, which would regress the batch-sharded decode cells.
     from repro.distributed.annotate import rule_set
+    if policy.is_emulated and not rule_set("kvseq"):
+        # Decode rides the same dispatch kind as prefill, with the ring
+        # validity mask as the (1, cap) padding mask — telemetry sees it as
+        # the "decode" shape class (S = 1).
+        attn_out = _emulated_attn(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                  cfg, ok[None, :], x.dtype)
+        out = layers.dense_apply(params["wo"], attn_out, policy)
+        return out, {"k": ck, "v": cv}
     if rule_set("kvseq"):
         # batch is 1 in this regime — never mapped (duplicate-axis hazard)
         ck = ann(ck, (None, "kvseq", "kv_heads", None))
@@ -215,14 +268,6 @@ def attn_decode_step(params: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
     else:
         scores = _gqa_scores(q, ck.astype(q.dtype), cfg).astype(jnp.float32)
     scores = layers.softcap(scores, cfg.logit_softcap)
-    # slot j holds absolute position p_j = j + cap * floor over ring history;
-    # valid iff p_j <= pos and pos - p_j < cap (ring) and p_j within window.
-    j = jnp.arange(cap)
-    # absolute position currently stored in slot j:
-    pj = jnp.where(j <= slot, pos - slot + j, pos - slot + j - cap)
-    ok = (pj >= 0) & (pj <= pos)
-    if window > 0:
-        ok &= (pos - pj) < window
     scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = layers.dense_apply(params["wo"],

@@ -95,16 +95,22 @@ def _builtin_sweep() -> None:
     val = jnp.asarray(rng.standard_normal((32, 4)))
     col = jnp.asarray(rng.integers(0, 32, (32, 4)).astype(np.int32))
     x = jnp.asarray(rng.standard_normal(32))
+    q = jnp.asarray(rng.standard_normal((16, 8)))
+    kq = jnp.asarray(rng.standard_normal((16, 8)))
+    vq = jnp.asarray(rng.standard_normal((16, 8)))
+    causal = jnp.tril(jnp.ones((16, 16), jnp.int8))
     for mode in ("xla", "pallas"):
         dispatch.matmul(a, b, mode=mode)
         dispatch.matmul(a, v, mode=mode)
         dispatch.stencil7(u, c, bz=4, mode=mode)
         dispatch.spmv(val, col, x, plan=plan_r7, br=8, mode=mode)
+        dispatch.attention(q, kq, vq, mask=causal, mode=mode)
     compensated.compensated_dot(jnp.asarray(rng.standard_normal(4096)),
                                 jnp.asarray(rng.standard_normal(4096)))
 
 
 def main(argv=None) -> int:
+    """CLI entry: report a saved snapshot, or sweep-and-report (see module)."""
     parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     parser.add_argument("snapshot", nargs="?", default=None,
                         help="telemetry snapshot JSON (from "

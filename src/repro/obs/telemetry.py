@@ -133,6 +133,7 @@ def enabled() -> bool:
 
 
 def tracing() -> bool:
+    """Whether the per-event trace ring is filling (mode == "trace")."""
     return get_mode() == "trace"
 
 

@@ -15,6 +15,14 @@ per-step serving events: ``serve.prefill`` (wall μs + tokens/sec per prompt),
 ``serve.decode`` (wall μs + tokens/sec per batched step), and
 ``serve.queue`` (queue depth / active slots per scheduler step) — alongside
 the per-matmul seam events the model's dispatch calls record on their own.
+
+Under an emulated precision policy (``policy_name="ozaki2_*"``), the score
+path of every prefill and decode step rides the dispatch seam's fused
+``attention`` kind (``dispatch.attention``: FlashAttention-style Pallas scan
+vs bit-identical reference), so the engine's ``dispatch_mode`` pin flips the
+serving hot path between the fused kernel and the reference exactly like the
+weight matmuls — and telemetry distinguishes the two serving shape classes
+via the kind's ``prefill`` / ``decode`` labels.
 """
 
 from __future__ import annotations

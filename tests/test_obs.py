@@ -133,14 +133,34 @@ def test_all_dispatch_kinds_record(tmp_path):
     val = jnp.asarray(rng.standard_normal((32, 4)))
     col = jnp.asarray(rng.integers(0, 32, (32, 4)).astype(np.int32))
     x = jnp.asarray(rng.standard_normal(32))
+    q = jnp.asarray(rng.standard_normal((16, 8)))
+    kq = jnp.asarray(rng.standard_normal((16, 8)))
+    vq = jnp.asarray(rng.standard_normal((16, 8)))
     with obs.telemetry_scope("counters"):
         dispatch.matmul(a, b, mode="xla")
         dispatch.matmul(a, v, mode="xla")
         dispatch.stencil7(u, c, bz=4, mode="xla")
         dispatch.spmv(val, col, x, plan=plan_r7, br=8, mode="xla")
+        dispatch.attention(q, kq, vq, mode="xla")
         compensated.compensated_dot(x, x)
     kinds = {k for (k, _, _) in obs.counters_snapshot()}
-    assert {"gemm", "gemv", "stencil7", "spmv_bell", "reduce"} <= kinds
+    assert {"gemm", "gemv", "stencil7", "spmv_bell", "attention",
+            "reduce"} <= kinds
+
+
+def test_attention_labels_prefill_vs_decode():
+    rng = _rng()
+    k = jnp.asarray(rng.standard_normal((16, 8)))
+    v = jnp.asarray(rng.standard_normal((16, 8)))
+    q_pre = jnp.asarray(rng.standard_normal((16, 8)))
+    q_dec = jnp.asarray(rng.standard_normal((1, 8)))
+    with obs.telemetry_scope("trace"):
+        dispatch.attention(q_pre, k, v, mode="xla")
+        dispatch.attention(q_dec, k, v, mode="xla")
+    labels = [e.label for e in obs.trace_snapshot() if e.kind == "attention"]
+    assert labels == ["prefill", "decode"]
+    events = [e for e in obs.trace_snapshot() if e.kind == "attention"]
+    assert all(e.tme_us > 0.0 for e in events)
 
 
 def test_reduce_labels_cover_sum_dot_norm():
@@ -167,7 +187,8 @@ def test_reset_clears_everything():
 
 # --- tracer safety (satellite: bit-identity under jit) -----------------------
 
-@pytest.mark.parametrize("op", ["matmul", "spmv", "stencil7", "dot"])
+@pytest.mark.parametrize("op", ["matmul", "spmv", "stencil7", "attention",
+                                "dot"])
 def test_jit_bit_identical_and_silent(op):
     """Under jax.jit with telemetry on: nothing is recorded (operands are
     tracers) and the result is bit-identical to telemetry off."""
@@ -189,6 +210,12 @@ def test_jit_bit_identical_and_silent(op):
         c = jnp.asarray(np.array([6.0, -1, -1, -1, -1, -1, -1]))
         fn = jax.jit(lambda u, c: dispatch.stencil7(u, c, bz=4, mode="xla"))
         args = (u, c)
+    elif op == "attention":
+        q = jnp.asarray(rng.standard_normal((16, 8)))
+        k = jnp.asarray(rng.standard_normal((16, 8)))
+        v = jnp.asarray(rng.standard_normal((16, 8)))
+        fn = jax.jit(lambda q, k, v: dispatch.attention(q, k, v, mode="xla"))
+        args = (q, k, v)
     else:
         x = jnp.asarray(rng.standard_normal(512), jnp.float32)
         fn = jax.jit(compensated.compensated_dot)

@@ -194,6 +194,14 @@ def test_op_costs_per_kind():
     W, Q, n_out = tme.op_costs("stencil7", (2, 3, 4))
     assert (W, Q, n_out) == (14.0 * 24, 16.0 * 24, 24.0)
     assert tme.op_costs("reduce", (100,)) == (200.0, 1600.0, 1.0)
+    # attention (B, S, D, T): QK^T + PV flops, q/k/v/out f64 traffic.
+    W, Q, n_out = tme.op_costs("attention", (2, 12, 16, 12))
+    assert W == 4.0 * 2 * 12 * 12 * 16
+    assert Q == 8.0 * 2 * (2 * 12 * 16 + 2 * 12 * 16)
+    assert n_out == 2 * 12 * (12 + 16)
+    # 3-tuple (S, D, T) means batch 1 (the dispatch entry always passes B).
+    assert tme.op_costs("attention", (12, 16, 12)) == \
+        tme.op_costs("attention", (1, 12, 16, 12))
     with pytest.raises(ValueError):
         tme.op_costs("fft", (8,))
 
@@ -207,6 +215,23 @@ def test_predict_op_time_route_beta_ordering():
     t_pal = tme.predict_op_time("gemm", dims, r=15, route="pallas",
                                 spec=tme.TPU_V5E)
     assert 0.0 < t_pal < t_xla
+
+
+def test_attention_emulated_time_routes_and_orders():
+    """The fused kind's prediction: the xla route pays the materialised S/P
+    matrices (β = r reference GEMMs), the pallas route streams them through
+    the online-softmax scan (β = 1) — so xla ≥ pallas, and predict_op_time
+    delegates to attention_emulated_time for kind="attention"."""
+    dims = (1, 64, 32, 64)
+    t_xla = tme.attention_emulated_time(dims, r=15, route="xla",
+                                        spec=tme.TPU_V5E)
+    t_pal = tme.attention_emulated_time(dims, r=15, route="pallas",
+                                        spec=tme.TPU_V5E)
+    assert 0.0 < t_pal < t_xla
+    assert tme.predict_op_time("attention", dims, r=15, route="xla",
+                               spec=tme.TPU_V5E) == pytest.approx(t_xla)
+    assert tme.predict_op_time("attention", dims, r=15, route="pallas",
+                               spec=tme.TPU_V5E) == pytest.approx(t_pal)
 
 
 def test_predict_op_time_reduce_has_no_garner_term():

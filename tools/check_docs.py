@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Docs-freshness check: the seam and its knobs may not outgrow docs/.
+
+Asserts (stdlib only — the CI lint job has no jax installed, so this parses
+source text rather than importing repro):
+
+  * every dispatch kind in ``AUTO_ROUTE`` (src/repro/core/dispatch.py)
+    appears somewhere under docs/;
+  * every ``REPRO_*`` environment variable referenced anywhere under src/
+    appears somewhere under docs/.
+
+Exit 0 when fresh; exit 1 listing what is undocumented.  Run from anywhere:
+``python tools/check_docs.py``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+ENV_RE = re.compile(r"REPRO_[A-Z]+(?:_[A-Z]+)*")
+
+
+def auto_route_kinds() -> set:
+    text = (ROOT / "src" / "repro" / "core" / "dispatch.py").read_text()
+    m = re.search(r"^AUTO_ROUTE\s*=\s*\{(.*?)^\}", text, re.S | re.M)
+    if not m:
+        sys.exit("check_docs: could not locate the AUTO_ROUTE literal in "
+                 "src/repro/core/dispatch.py")
+    kinds = set(re.findall(r'^\s*"([a-z0-9_]+)"\s*:\s*\{', m.group(1), re.M))
+    if not kinds:
+        sys.exit("check_docs: AUTO_ROUTE parsed to zero kinds")
+    return kinds
+
+
+def repro_env_vars() -> set:
+    found = set()
+    for path in (ROOT / "src").rglob("*.py"):
+        found.update(ENV_RE.findall(path.read_text()))
+    return found
+
+
+def docs_text() -> str:
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    if not docs:
+        sys.exit("check_docs: docs/ has no markdown pages")
+    return "\n".join(p.read_text() for p in docs)
+
+
+def main() -> int:
+    text = docs_text()
+    problems = []
+    for kind in sorted(auto_route_kinds()):
+        # Kinds appear in prose and tables, often inside `code|spans`; a
+        # word-boundary search keeps e.g. "gemm" from matching "gemms"-free.
+        if not re.search(rf"\b{re.escape(kind)}\b", text):
+            problems.append(f"dispatch kind {kind!r} is not mentioned in docs/")
+    for var in sorted(repro_env_vars()):
+        if var not in text:
+            problems.append(f"env var {var} is not mentioned in docs/")
+    if problems:
+        for p in problems:
+            print(f"check_docs: {p}", file=sys.stderr)
+        print(f"check_docs: FAILED ({len(problems)} undocumented item(s)) — "
+              "update docs/architecture.md / docs/env.md", file=sys.stderr)
+        return 1
+    print("check_docs: docs/ covers every AUTO_ROUTE kind and REPRO_* knob")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
